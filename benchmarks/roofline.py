@@ -1,0 +1,82 @@
+"""Roofline report builder: reads the dry-run JSON records and renders the
+EXPERIMENTS.md §Roofline table (per arch x shape x mesh: three terms,
+dominant bottleneck, MODEL_FLOPS ratio, roofline fraction).
+
+Usage:  PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+        [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ARCH_ORDER = [
+    "mistral-nemo-12b", "qwen3-4b", "starcoder2-3b", "gemma2-2b",
+    "mamba2-130m", "whisper-medium", "recurrentgemma-2b",
+    "llama-3.2-vision-11b", "grok-1-314b", "deepseek-v2-lite-16b",
+    "rmat-coloring",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k", "coloring"]
+
+
+def load(dir_: str, tag: str = "baseline"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dir_, f"*__{tag}.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    recs.sort(key=lambda r: (ARCH_ORDER.index(r["arch"]) if r["arch"] in ARCH_ORDER else 99,
+                             SHAPE_ORDER.index(r["shape"]) if r["shape"] in SHAPE_ORDER else 99,
+                             len(r["mesh"])))
+    return recs
+
+
+def one_liner(r):
+    rf = r.get("roofline", {})
+    mesh = "x".join(str(d) for d in r["mesh"])
+    dom = rf.get("dominant", "?").replace("_s", "")
+    frac = r.get("roofline_fraction", 0.0)
+    ratio = r.get("useful_flops_ratio", 0.0)
+    return (f"{r['arch']:22s} {r['shape']:12s} {mesh:8s} "
+            f"C={rf.get('compute_s', 0):9.3e} M={rf.get('memory_s', 0):9.3e} "
+            f"X={rf.get('collective_s', 0):9.3e} dom={dom:10s} "
+            f"useful={ratio:5.2f} frac={frac:6.3f}")
+
+
+def markdown_table(recs):
+    lines = [
+        "| arch | shape | mesh | compute (s) | memory (s) | collective (s) "
+        "| dominant | useful FLOPs | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        rf = r.get("roofline", {})
+        mesh = "x".join(str(d) for d in r["mesh"])
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} "
+            f"| {rf.get('compute_s', 0):.3e} | {rf.get('memory_s', 0):.3e} "
+            f"| {rf.get('collective_s', 0):.3e} "
+            f"| {rf.get('dominant', '?').replace('_s', '')} "
+            f"| {r.get('useful_flops_ratio', 0):.2f} "
+            f"| {r.get('roofline_fraction', 0):.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.dir, args.tag)
+    if args.markdown:
+        print(markdown_table(recs))
+        return
+    for r in recs:
+        print(one_liner(r))
+    print(f"\n{len(recs)} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,184 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Emits ``name,us_per_call,derived`` CSV rows plus per-benchmark detail blocks.
+Scales are CPU-feasible reductions of the paper's scale-24..27 graphs (the
+claims validated are structural/relative, not absolute wall-clock).
+
+  table2_graph_properties   — paper Table 2 (+Table 4 columns) at scale S
+  fig7_9_strong_scaling     — ITERATIVE runtime vs concurrency (proxy for
+                              thread scaling: vectorized rounds on CPU)
+  fig10_conflicts           — conflicts per round / total / iterations
+  fig11_colors              — colors vs concurrency vs serial, all graphs
+  dataflow_exactness        — DATAFLOW == serial greedy + sweep counts
+  kernel_firstfit           — Pallas firstfit vs sort-mex engine timing
+  comm_schedule             — coloring-scheduled all-to-all rounds
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core import (rmat, greedy_color, color_iterative, color_dataflow,
+                        dataflow_levels, validate_coloring, num_colors,
+                        schedule_transfers)
+from repro.core.comm_schedule import moe_all_to_all_transfers
+
+GRAPHS = ["RMAT-ER", "RMAT-G", "RMAT-B"]
+ROWS = []
+
+
+def _row(name, us, derived):
+    ROWS.append(f"{name},{us:.1f},{derived}")
+    print(f"{name},{us:.1f},{derived}")
+
+
+def _timed(fn, *args, repeat=3, **kw):
+    fn(*args, **kw)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) / repeat * 1e6
+
+
+def table2_graph_properties(scale=16):
+    print(f"\n== Table 2/4: graph structural properties (scale {scale}) ==")
+    print(f"{'graph':8s} {'|V|':>9s} {'|E|':>10s} {'avgdeg':>7s} {'maxdeg':>7s} "
+          f"{'var':>10s} {'%isol':>6s}")
+    for name in GRAPHS:
+        t0 = time.perf_counter()
+        g = rmat.paper_graph(name, scale=scale, seed=0)
+        us = (time.perf_counter() - t0) * 1e6
+        s = g.stats()
+        print(f"{name:8s} {s['num_vertices']:9d} {s['num_edges']:10d} "
+              f"{s['avg_degree']:7.2f} {s['max_degree']:7d} "
+              f"{s['degree_variance']:10.1f} {s['pct_isolated']:6.2f}")
+        _row(f"table2/{name}", us,
+             f"maxdeg={s['max_degree']};var={s['degree_variance']:.1f};"
+             f"isol={s['pct_isolated']:.2f}%")
+
+
+def fig7_9_strong_scaling(scale=15):
+    """Runtime of ITERATIVE vs concurrency (the paper's thread axis).
+
+    On one CPU device the SIMD work per round is constant; what scales is
+    rounds x sweeps (the serialization the paper's Fig. 7-9 hides inside
+    thread counts). We report device-time per run and the sweep counts.
+    """
+    print(f"\n== Fig 7/8/9 proxy: ITERATIVE cost vs concurrency (scale {scale}) ==")
+    for name in GRAPHS:
+        g = rmat.paper_graph(name, scale=scale, seed=0)
+        dg = g.to_device()
+        for p in [1, 16, 128, 1024, 16384]:
+            res, us = _timed(color_iterative, dg, concurrency=p, repeat=1)
+            _row(f"fig7/{name}/P{p}", us,
+                 f"rounds={res.rounds};sweeps={res.sweeps};"
+                 f"conflicts={res.total_conflicts};colors={res.num_colors}")
+
+
+def fig10_conflicts(scale=16):
+    print(f"\n== Fig 10: conflicts (RMAT-B, scale {scale}) ==")
+    g = rmat.paper_graph("RMAT-B", scale=scale, seed=0)
+    dg = g.to_device()
+    # the XMT row uses the paper's thread:vertex RATIO (12800 : 2^24), not
+    # the absolute thread count — at reduced scale that's what preserves the
+    # conflict regime; the absolute-P row is kept for the stress reading
+    xmt_ratio_p = max(2, int(12800 * g.num_vertices / (1 << 24)))
+    for p, label in [(16, "nehalem-16T"), (128, "niagara-128T"),
+                     (xmt_ratio_p, f"xmt-ratio-{xmt_ratio_p}T"),
+                     (12800, "xmt-absolute-12800T")]:
+        res, us = _timed(color_iterative, dg, concurrency=p, repeat=1)
+        cpr = [int(c) for c in np.asarray(res.conflicts_per_round)[:res.rounds]]
+        frac1 = cpr[0] / max(1, sum(cpr))
+        _row(f"fig10/{label}", us,
+             f"total={res.total_conflicts};iters={res.rounds};"
+             f"frac_round1={frac1:.2f};conflicts_per_round={cpr[:12]}")
+        assert res.total_conflicts < g.num_vertices, "conflicts must be << |V|"
+
+
+def fig11_colors(scale=15):
+    print(f"\n== Fig 11: colors used vs serial (scale {scale}) ==")
+    for name in GRAPHS:
+        g = rmat.paper_graph(name, scale=scale, seed=0)
+        serial = num_colors(greedy_color(g))
+        dg = g.to_device()
+        cols = {}
+        for p in [16, 128, 12800]:
+            res = color_iterative(dg, concurrency=p)
+            assert validate_coloring(g, np.asarray(res.colors))
+            cols[p] = res.num_colors
+        df = color_dataflow(dg).num_colors
+        _row(f"fig11/{name}", 0.0,
+             f"serial={serial};iter16={cols[16]};iter128={cols[128]};"
+             f"iter12800={cols[12800]};dataflow={df}")
+        assert df == serial, "DATAFLOW must equal serial (C4)"
+
+
+def dataflow_exactness(scale=15):
+    print(f"\n== DATAFLOW: exactness + sweeps vs DAG depth (scale {scale}) ==")
+    for name in GRAPHS:
+        g = rmat.paper_graph(name, scale=scale, seed=0)
+        dg = g.to_device()
+        res, us = _timed(color_dataflow, dg, repeat=1)
+        _, depth = dataflow_levels(dg)
+        same = bool(np.array_equal(np.asarray(res.colors), greedy_color(g)))
+        _row(f"dataflow/{name}", us,
+             f"sweeps={res.sweeps};dag_depth={depth};equals_serial={same}")
+        assert same
+
+
+def kernel_firstfit(scale=13):
+    print(f"\n== Pallas firstfit engine vs sort-mex engine (scale {scale}) ==")
+    import jax.numpy as jnp
+    from repro.kernels import make_kernel_mex_fn
+    g = rmat.paper_graph("RMAT-G", scale=scale, seed=0)
+    dg = g.to_device()
+    res_s, us_s = _timed(color_iterative, dg, concurrency=256, repeat=1)
+    ell, _ = g.to_ell()
+    mex_fn = make_kernel_mex_fn(jnp.asarray(ell))
+    res_k, us_k = _timed(color_iterative, dg, concurrency=256,
+                         mex_fn=mex_fn, repeat=1)
+    ok = validate_coloring(g, np.asarray(res_k.colors))
+    _row("kernel/sort_engine", us_s, f"colors={res_s.num_colors}")
+    _row("kernel/pallas_engine", us_k,
+         f"colors={res_k.num_colors};valid={ok};interpret_mode=True")
+
+
+def comm_schedule_bench():
+    print("\n== Coloring-scheduled MoE all-to-all (framework application) ==")
+    rng = np.random.default_rng(0)
+    for d in [16, 64, 256]:
+        counts = (rng.random((d, d)) < 0.3).astype(int)
+        tr = moe_all_to_all_transfers(counts)
+        sch, us = _timed(schedule_transfers, tr, repeat=1)
+        _row(f"comm/{d}dev", us,
+             f"transfers={len(tr)};rounds={sch.num_rounds};"
+             f"lower_bound={sch.lower_bound};gap={sch.optimality_gap:.2f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=None,
+                    help="override graph scale for the heavy benchmarks")
+    args = ap.parse_args()
+    s = args.scale
+    print("name,us_per_call,derived")
+    table2_graph_properties(scale=s or 16)
+    fig7_9_strong_scaling(scale=s or 15)
+    fig10_conflicts(scale=s or 16)
+    fig11_colors(scale=s or 15)
+    dataflow_exactness(scale=s or 15)
+    kernel_firstfit(scale=s or 13)
+    comm_schedule_bench()
+    print("\n-- CSV --")
+    print("name,us_per_call,derived")
+    for r in ROWS:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

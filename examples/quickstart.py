@@ -1,0 +1,47 @@
+"""Quickstart: the paper in ~40 lines.
+
+Generates the paper's three R-MAT graph families, colors each with the
+serial oracle (Alg. 1), the speculative ITERATIVE algorithm (Alg. 2) and the
+dataflow fixpoint (Alg. 3-5, TPU adaptation), and validates the results.
+
+    PYTHONPATH=src python examples/quickstart.py [--scale 12]
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import (rmat, greedy_color, color_iterative, color_dataflow,
+                        validate_coloring, num_colors)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=12)
+    ap.add_argument("--concurrency", type=int, default=128)
+    args = ap.parse_args()
+
+    for name in ["RMAT-ER", "RMAT-G", "RMAT-B"]:
+        g = rmat.paper_graph(name, scale=args.scale, seed=0)
+        dg = g.to_device()
+
+        serial = greedy_color(g)
+        it = color_iterative(dg, concurrency=args.concurrency)
+        df = color_dataflow(dg)
+
+        assert validate_coloring(g, serial)
+        assert validate_coloring(g, np.asarray(it.colors))
+        assert validate_coloring(g, np.asarray(df.colors))
+        exact = np.array_equal(np.asarray(df.colors), serial)
+
+        s = g.stats()
+        print(f"{name}: |V|={s['num_vertices']} |E|={s['num_edges']} "
+              f"maxdeg={s['max_degree']}")
+        print(f"  serial greedy : {num_colors(serial):3d} colors")
+        print(f"  ITERATIVE(P={args.concurrency}): {it.num_colors:3d} colors, "
+              f"{it.rounds} rounds, {it.total_conflicts} conflicts")
+        print(f"  DATAFLOW      : {df.num_colors:3d} colors, "
+              f"{df.sweeps} sweeps, identical to serial: {exact}")
+
+
+if __name__ == "__main__":
+    main()

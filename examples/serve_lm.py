@@ -1,0 +1,25 @@
+"""Batched serving example: prefill + autoregressive decode with KV caches
+(ring buffers for local-attention layers, recurrent state for SSM/hybrid).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch gemma2-2b --smoke
+"""
+import argparse
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full config (big; default is smoke)")
+    args = ap.parse_args()
+    argv = ["--arch", args.arch, "--batch", "8", "--prompt-len", "64",
+            "--gen", "32", "--temperature", "0.8"]
+    if not args.full:
+        argv.append("--smoke")
+    serve.main(argv)
+
+
+if __name__ == "__main__":
+    main()

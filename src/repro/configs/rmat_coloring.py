@@ -1,0 +1,30 @@
+"""The paper's own workload as a first-class config: distributed BSP
+speculative coloring (core/distributed.py) of the paper's R-MAT graphs,
+lowered onto the production meshes by launch/dryrun.py alongside the LM
+architectures.
+
+Scales follow the paper's Table 4 (scale-24..27, edge factor 8); the dry-run
+lowers the scale given by ``dryrun_scale`` (default 24: 16.7M vertices,
+~134M undirected edges -> ~268M directed, ~1M directed edges per device slab
+at 512 devices with padding).
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ColoringConfig:
+    name: str = "rmat-coloring"
+    family: str = "coloring"
+    dryrun_scale: int = 24
+    edge_factor: int = 8
+    params: tuple = (0.55, 0.15, 0.15, 0.15)   # RMAT-B, the hostile one
+    max_rounds: int = 64
+    local_concurrency: int = 1
+
+
+def get_config() -> ColoringConfig:
+    return ColoringConfig()
+
+
+def get_smoke_config() -> ColoringConfig:
+    return ColoringConfig(name="rmat-coloring-smoke", dryrun_scale=10)

@@ -1,0 +1,216 @@
+"""Distributed BSP coloring via shard_map — the Bozdag et al. [6] framework
+(the paper's ITERATIVE ancestor) mapped onto a JAX device mesh.
+
+Vertices are block-partitioned across all mesh devices. Each BSP round:
+
+  1. ``all_gather`` committed colors (pending masked 0) — the boundary-color
+     exchange of the distributed framework, fused into one collective;
+  2. local speculative greedy over the device's pending vertices. With local
+     concurrency ``C=1`` (default) each device colors its pending set
+     *sequentially* — exactly the distributed-memory algorithm — realized as
+     the chaotic fixpoint of the local offset-precedence dataflow equations
+     (converges in local-DAG-depth sweeps, no communication inside);
+     cross-device pending neighbors are speculated against (not forbidden);
+  3. ``all_gather`` of committed colors + pending flags;
+  4. conflict detection: monochromatic same-round pairs — with C=1 these are
+     exclusively *boundary* (cross-device) conflicts, as in [6]; the higher
+     global index recolors;
+  5. ``psum`` termination vote.
+
+The whole multi-round algorithm is one ``lax.while_loop`` inside shard_map,
+so it lowers/compiles as a single XLA program on the production meshes —
+`launch/dryrun.py` exercises it via the rmat_coloring config.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .graph import Graph
+from .mex import segment_mex
+
+
+def partition_graph(graph: Graph, num_devices: int):
+    """Host-side partitioning into per-device fixed-shape edge slabs.
+
+    Returns (lsrc [D, El], ldst [D, El], verts_per_device). Device d owns
+    global vertices [d*Vl, (d+1)*Vl); lsrc holds *local* ids (pad = Vl),
+    ldst holds *global* ids (pad = Vl*D).
+    """
+    D = num_devices
+    V = graph.num_vertices
+    Vl = -(-V // D)
+    Vp = Vl * D
+    src, dst = graph.directed_edges()  # src sorted
+    owner = src // Vl
+    counts = np.bincount(owner, minlength=D)
+    El = max(1, int(counts.max()))
+    lsrc = np.full((D, El), Vl, np.int32)
+    ldst = np.full((D, El), Vp, np.int32)
+    offsets = np.zeros(D + 1, np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    for d in range(D):
+        sl = slice(offsets[d], offsets[d + 1])
+        k = offsets[d + 1] - offsets[d]
+        lsrc[d, :k] = src[sl] - d * Vl
+        ldst[d, :k] = dst[sl]
+    return lsrc, ldst, Vl
+
+
+def _bsp_local(lsrc, ldst, *, axis_names: Tuple[str, ...], verts_local: int,
+               num_devices: int, local_concurrency: int, max_rounds: int,
+               max_sweeps: int):
+    """Per-device body (runs under shard_map).
+
+    Wire format (§Perf H-C1): ONE int16 all_gather per round carrying
+    ``color << 1 | pending`` — the committed snapshot for the NEXT round's
+    phase 1 and the conflict-detection view of THIS round are both decodable
+    from it, replacing the two int32 + one bool gathers of the naive BSP
+    round (measured 4.4x collective-byte reduction). Colors must stay below
+    2^14 (greedy uses <= Delta+1; the paper's graphs use <= 143).
+    """
+    Vl = verts_local
+    Vp = Vl * num_devices
+    C = local_concurrency
+    lsrc = lsrc.reshape(-1)
+    ldst = ldst.reshape(-1)
+    didx = lax.axis_index(axis_names).astype(jnp.int32)
+    base = didx * Vl
+    gsrc = jnp.where(lsrc < Vl, lsrc + base, Vp)
+    dst_local = (ldst >= base) & (ldst < base + Vl)
+    dst_loc = jnp.where(dst_local, ldst - base, Vl)  # local id or pad
+    syn_v = jnp.arange(Vl, dtype=jnp.int32)
+    syn_c = jnp.zeros((Vl,), jnp.int32)
+    lsrc_safe = jnp.minimum(lsrc, Vl)
+
+    def gather(x):
+        return lax.all_gather(x, axis_names, tiled=True)
+
+    def pv(x):
+        # mark as device-varying so while_loop carries type-check under
+        # shard_map's varying-manual-axes tracking
+        return lax.pvary(x, axis_names)
+
+    def round_body(state):
+        colors, pending, packed_glob, rnd, conf_hist, _ = state
+        # (1) decode last round's wire. ALL nonzero colors forbid — including
+        # stale colors of re-pending vertices: over-forbidding never breaks
+        # validity (it slightly biases re-colored vertices away from the
+        # contested color, which helps) and it lets one gather per round
+        # serve both phase 1 and conflict detection (§Perf H-C2).
+        snap = packed_glob.astype(jnp.int32) >> 1               # [Vp]
+        snap_pad = jnp.concatenate([snap, jnp.zeros((1,), jnp.int32)])
+        ppad = jnp.concatenate([pending, jnp.zeros((1,), jnp.bool_)])
+
+        # local lockstep offsets (C virtual threads per device)
+        r = pending.sum(dtype=jnp.int32)
+        bs = lax.div(r + C - 1, C)
+        rank = jnp.cumsum(pending.astype(jnp.int32)) - 1
+        offset = jnp.where(pending, rank % jnp.maximum(bs, 1), 0).astype(jnp.int32)
+        opad = jnp.concatenate([offset, jnp.full((1,), jnp.iinfo(jnp.int32).max, jnp.int32)])
+
+        src_pending = ppad[lsrc_safe] & (lsrc < Vl)
+        nbr_local_pending = ppad[dst_loc]  # local *and* pending
+        precede = nbr_local_pending & (opad[dst_loc] < opad[lsrc_safe])
+        key_v = jnp.where(src_pending, lsrc, Vl)
+
+        # (2) local sequential greedy as an offset-DAG fixpoint (no comms)
+        def sweep(s):
+            cwork, _, n = s
+            cpad_loc = jnp.concatenate([cwork, jnp.zeros((1,), jnp.int32)])
+            contrib = jnp.where(precede, cpad_loc[dst_loc], snap_pad[ldst])
+            key_c = jnp.where(src_pending, contrib, 0)
+            mex = segment_mex(
+                jnp.concatenate([key_v, syn_v]),
+                jnp.concatenate([key_c, syn_c]), Vl)
+            c_new = jnp.where(pending, mex, cwork)
+            return c_new, jnp.any(c_new != cwork), n + 1
+
+        def sweep_cond(s):
+            _, changed, n = s
+            return jnp.logical_and(changed, n < max_sweeps)
+
+        c0 = jnp.where(pending, 0, colors)
+        colors, _, _ = lax.while_loop(
+            sweep_cond, sweep,
+            (c0, pv(jnp.asarray(True)), pv(jnp.asarray(0, jnp.int32))))
+
+        # (3) single fused wire: color<<1 | was-pending-this-round (int16)
+        packed_local = ((colors << 1) | pending.astype(jnp.int32)).astype(jnp.int16)
+        packed_glob = gather(packed_local)                      # [Vp] int16
+        cglob2 = (packed_glob.astype(jnp.int32) >> 1)
+        aglob2 = (packed_glob & 1).astype(jnp.bool_)
+        cgpad = jnp.concatenate([cglob2, jnp.zeros((1,), jnp.int32)])
+        agpad = jnp.concatenate([aglob2, jnp.zeros((1,), jnp.bool_)])
+
+        # (4) same-round conflicts (boundary + same-offset); higher gid recolors
+        conf_e = (src_pending & agpad[ldst]
+                  & (cgpad[gsrc] == cgpad[ldst]) & (gsrc > ldst))
+        new_pending = (jnp.zeros((Vl,), jnp.int32)
+                       .at[lsrc].max(conf_e.astype(jnp.int32), mode="drop")
+                       .astype(jnp.bool_))
+        # (5) global termination vote
+        total = lax.psum(new_pending.sum(dtype=jnp.int32), axis_names)
+        conf_hist = conf_hist.at[rnd].set(total)
+        return colors, new_pending, packed_glob, rnd + 1, conf_hist, total
+
+    def cond(state):
+        _, _, _, rnd, _, total = state
+        return jnp.logical_and(total > 0, rnd < max_rounds)
+
+    init = (pv(jnp.zeros((Vl,), jnp.int32)), pv(jnp.ones((Vl,), jnp.bool_)),
+            pv(jnp.ones((Vp,), jnp.int16)),  # all uncolored+pending
+            pv(jnp.asarray(0, jnp.int32)), pv(jnp.zeros((max_rounds,), jnp.int32)),
+            jnp.asarray(1, jnp.int32))  # psum output is axis-invariant
+    colors, pending, packed_glob, rnd, conf_hist, _ = lax.while_loop(
+        cond, round_body, init)
+    return colors[None], rnd[None], conf_hist[None]
+
+
+def build_distributed_coloring(mesh: Mesh, verts_local: int, edges_local: int,
+                               local_concurrency: int = 1,
+                               max_rounds: int = 64, max_sweeps: int = 16384):
+    """Build the jitted shard_map coloring program for a mesh.
+
+    Returns ``fn(lsrc [D, El], ldst [D, El]) -> (colors [D, Vl], rounds,
+    conflicts_per_round)``; inputs/outputs sharded over all mesh axes.
+    Static shapes, so the identical program serves dry-run lowering.
+    """
+    axis_names = tuple(mesh.axis_names)
+    D = int(np.prod(mesh.devices.shape))
+    body = functools.partial(
+        _bsp_local, axis_names=axis_names, verts_local=verts_local,
+        num_devices=D, local_concurrency=local_concurrency,
+        max_rounds=max_rounds, max_sweeps=max_sweeps)
+    spec_in = P(axis_names, None)
+    smapped = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(spec_in, spec_in),
+        out_specs=(P(axis_names, None), P(axis_names), P(axis_names, None)),
+    )
+
+    def run(lsrc, ldst):
+        colors, rnd, conf = smapped(lsrc, ldst)
+        return colors, rnd.max(), conf.max(axis=0)
+
+    return jax.jit(run)
+
+
+def color_distributed(graph: Graph, mesh: Mesh, local_concurrency: int = 1,
+                      max_rounds: int = 64):
+    """End-to-end: partition on host, color on the mesh, return colors [V]."""
+    D = int(np.prod(mesh.devices.shape))
+    lsrc, ldst, Vl = partition_graph(graph, D)
+    fn = build_distributed_coloring(mesh, Vl, lsrc.shape[1],
+                                    local_concurrency, max_rounds)
+    with jax.set_mesh(mesh):
+        colors, rounds, conf = fn(jnp.asarray(lsrc), jnp.asarray(ldst))
+    colors = np.asarray(colors).reshape(-1)[: graph.num_vertices]
+    return colors, int(rounds), np.asarray(conf)

@@ -1,0 +1,162 @@
+"""Graph containers for the coloring engine.
+
+Two representations:
+
+* :class:`Graph` — host-side (numpy) CSR + directed edge list. Construction,
+  dedup, symmetrization, stats live here.
+* :class:`DeviceGraph` — fixed-shape jnp arrays consumed by the JAX coloring
+  algorithms (directed edge list, optionally padded ELL for the Pallas path).
+
+Conventions
+-----------
+* Vertices are ``int32`` ids in ``[0, V)``.
+* The *directed* edge list contains both ``(u, v)`` and ``(v, u)`` for every
+  undirected edge, so per-vertex reductions over ``src`` see every neighbor.
+* Colors are positive ints; ``0`` means "uncolored".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Host-side undirected graph in CSR form (numpy)."""
+
+    num_vertices: int
+    row_ptr: np.ndarray  # [V+1] int64
+    col_idx: np.ndarray  # [2E]  int32, neighbors sorted per row
+
+    # ---------------------------------------------------------- construction
+    @staticmethod
+    def from_edges(num_vertices: int, edges: np.ndarray) -> "Graph":
+        """Build from an [M, 2] array of (possibly duplicated, possibly
+        self-looped, possibly one-directional) edges — mirrors the paper's
+        post-processing of R-MAT output (dup/self-loop removal)."""
+        edges = np.asarray(edges, dtype=np.int64)
+        if edges.size == 0:
+            return Graph(num_vertices,
+                         np.zeros(num_vertices + 1, np.int64),
+                         np.zeros(0, np.int32))
+        u, v = edges[:, 0], edges[:, 1]
+        keep = u != v  # drop self loops
+        u, v = u[keep], v[keep]
+        # symmetrize, dedup via linear index
+        src = np.concatenate([u, v])
+        dst = np.concatenate([v, u])
+        lin = src * num_vertices + dst
+        lin = np.unique(lin)
+        src = (lin // num_vertices).astype(np.int32)
+        dst = (lin % num_vertices).astype(np.int32)
+        # lin is sorted => src sorted, dst sorted within src
+        counts = np.bincount(src, minlength=num_vertices).astype(np.int64)
+        row_ptr = np.zeros(num_vertices + 1, np.int64)
+        np.cumsum(counts, out=row_ptr[1:])
+        return Graph(num_vertices, row_ptr, dst)
+
+    # ---------------------------------------------------------------- stats
+    @property
+    def num_directed_edges(self) -> int:
+        return int(self.col_idx.shape[0])
+
+    @property
+    def num_edges(self) -> int:
+        return self.num_directed_edges // 2
+
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.row_ptr).astype(np.int64)
+
+    def max_degree(self) -> int:
+        d = self.degrees()
+        return int(d.max()) if d.size else 0
+
+    def degree_variance(self) -> float:
+        d = self.degrees()
+        return float(d.var()) if d.size else 0.0
+
+    def isolated_fraction(self) -> float:
+        d = self.degrees()
+        return float((d == 0).mean()) if d.size else 0.0
+
+    def stats(self) -> dict:
+        """The columns of the paper's Table 2 / Table 4."""
+        return {
+            "num_vertices": self.num_vertices,
+            "num_edges": self.num_edges,
+            "avg_degree": (2.0 * self.num_edges / max(1, self.num_vertices)),
+            "max_degree": self.max_degree(),
+            "degree_variance": self.degree_variance(),
+            "pct_isolated": 100.0 * self.isolated_fraction(),
+        }
+
+    # ------------------------------------------------------------ transforms
+    def directed_edges(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(src, dst) with both directions present; src is sorted."""
+        src = np.repeat(
+            np.arange(self.num_vertices, dtype=np.int32),
+            np.diff(self.row_ptr).astype(np.int64),
+        )
+        return src, self.col_idx.astype(np.int32)
+
+    def relabel(self, perm: np.ndarray) -> "Graph":
+        """Relabel vertices: new id of old vertex i is ``perm[i]``."""
+        src, dst = self.directed_edges()
+        new_src = perm[src].astype(np.int64)
+        new_dst = perm[dst].astype(np.int64)
+        half = new_src < new_dst
+        return Graph.from_edges(
+            self.num_vertices, np.stack([new_src[half], new_dst[half]], 1)
+        )
+
+    def to_device(self, *, pad_edges_to: Optional[int] = None) -> "DeviceGraph":
+        src, dst = self.directed_edges()
+        e = src.shape[0]
+        pad = (pad_edges_to or e) - e
+        if pad < 0:
+            raise ValueError(f"pad_edges_to={pad_edges_to} < num edges {e}")
+        if pad:
+            # padding edges point at a phantom vertex V with src=V so they are
+            # inert in segment reductions over [0, V)
+            src = np.concatenate([src, np.full(pad, self.num_vertices, np.int32)])
+            dst = np.concatenate([dst, np.full(pad, self.num_vertices, np.int32)])
+        return DeviceGraph(
+            num_vertices=self.num_vertices,
+            num_directed_edges=e,
+            src=jnp.asarray(src),
+            dst=jnp.asarray(dst),
+        )
+
+    def to_ell(self, max_degree: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray]:
+        """Padded ELL adjacency: ([V, D] int32 neighbor ids, [V] degrees).
+
+        Pad slots hold ``V`` (phantom vertex). Used by the Pallas firstfit
+        path, which wants a dense regular slab.
+        """
+        deg = self.degrees()
+        d_max = int(max_degree if max_degree is not None else (deg.max() if deg.size else 0))
+        ell = np.full((self.num_vertices, max(1, d_max)), self.num_vertices, np.int32)
+        src, dst = self.directed_edges()
+        # position of each edge within its row
+        pos = np.arange(src.shape[0], dtype=np.int64) - self.row_ptr[src]
+        ok = pos < d_max
+        ell[src[ok], pos[ok]] = dst[ok]
+        return ell, deg.astype(np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceGraph:
+    """Fixed-shape directed edge list on device."""
+
+    num_vertices: int
+    num_directed_edges: int
+    src: jnp.ndarray  # [E2p] int32 in [0, V]; V = padding
+    dst: jnp.ndarray  # [E2p] int32 in [0, V]
+
+    @property
+    def padded_edges(self) -> int:
+        return int(self.src.shape[0])

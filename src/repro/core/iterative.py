@@ -1,0 +1,162 @@
+"""ITERATIVE — the paper's Algorithm 2 (speculation + iteration), vectorized.
+
+Execution model (faithful adaptation, DESIGN.md §2)
+---------------------------------------------------
+The paper runs Alg. 2's phase-1 loop with ``#pragma omp parallel for`` and
+default *static* scheduling: each of ``P`` threads owns a contiguous block of
+the pending set and colors it sequentially. In the canonical lockstep
+("superstep") model of that execution, the vertices racing at any instant are
+those at the same *offset* within their thread's block; a vertex sees the
+committed colors of every vertex at a strictly smaller offset, and conflicts
+can only arise between same-offset vertices.
+
+We reproduce those semantics exactly on a SIMD machine. Per round:
+
+  1. pending vertices get ``offset = rank % ceil(|U|/P)`` (rank = position in
+     the pending set, matching OpenMP-static block assignment);
+  2. tentative colors are the fixpoint of the *dataflow equations over the
+     offset-precedence DAG* —
+         c[v] = mex{ c[w] : w adj v, committed(w) or offset(w) < offset(v) } —
+     reached by chaotic sweeps (depth(DAG) of them), which is the SIMD
+     equivalent of the threads advancing through their blocks in lockstep;
+  3. conflict detection (Alg. 2 lines 11-14): monochromatic pending pairs
+     (necessarily same-offset) queue the higher-index endpoint for the next
+     round.
+
+Limits: ``concurrency=1`` degenerates to serial greedy (0 conflicts,
+colors == Alg. 1); ``concurrency >= |V|`` is the fully-concurrent limit (the
+XMT's 16K-thread regime). Conflicts grow with ``concurrency`` — the paper's
+Fig. 10(a) trend — and the pending set strictly shrinks every round (the
+minimum-index vertex of each conflict cluster always survives), so the loop
+terminates.
+
+The first-fit engine is the segmented sort-based mex (O(E log E) per sweep,
+TPU-friendly); the Pallas ``firstfit`` kernel offers the bitmask variant for
+the ELL path (see kernels/).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .graph import DeviceGraph
+from .mex import segment_mex
+
+
+@dataclasses.dataclass
+class ColoringResult:
+    colors: jnp.ndarray               # [V] int32, >= 1
+    rounds: int                       # outer iterations (paper Fig. 10b)
+    conflicts_per_round: jnp.ndarray  # [max_rounds] int32 (paper Fig. 10c)
+    sweeps: int                       # total inner dataflow sweeps
+
+    @property
+    def total_conflicts(self) -> int:
+        return int(self.conflicts_per_round.sum())
+
+    @property
+    def num_colors(self) -> int:
+        return int(self.colors.max())
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_vertices", "concurrency", "max_rounds", "max_sweeps",
+                     "mex_fn"),
+)
+def _iterative_impl(src, dst, *, num_vertices: int, concurrency: int,
+                    max_rounds: int, max_sweeps: int, mex_fn=None):
+    V = num_vertices
+    P = concurrency
+    syn_v = jnp.arange(V, dtype=jnp.int32)
+    syn_c = jnp.zeros((V,), jnp.int32)
+
+    def phase1(colors, pending, offset):
+        """Fixpoint of the offset-precedence dataflow equations."""
+        ppad = jnp.concatenate([pending, jnp.zeros((1,), jnp.bool_)])
+        opad = jnp.concatenate([offset, jnp.full((1,), jnp.iinfo(jnp.int32).max, jnp.int32)])
+        src_pending = ppad[src]
+        # neighbor forbids src iff committed, or pending at smaller offset
+        forbids = src_pending & (~ppad[dst] | (opad[dst] < opad[src]))
+        key_v_base = jnp.where(forbids, src, V)
+
+        def sweep(state):
+            c, _, n = state
+            if mex_fn is not None:
+                mex = mex_fn(c, pending, offset)
+            else:
+                cpad = jnp.concatenate([c, jnp.zeros((1,), jnp.int32)])
+                key_c = jnp.where(forbids, cpad[dst], 0)
+                mex = segment_mex(
+                    jnp.concatenate([key_v_base, syn_v]),
+                    jnp.concatenate([key_c, syn_c]), V)
+            c_new = jnp.where(pending, mex, c)
+            return c_new, jnp.any(c_new != c), n + 1
+
+        def cond(state):
+            _, changed, n = state
+            return jnp.logical_and(changed, n < max_sweeps)
+
+        c0 = jnp.where(pending, 0, colors)
+        c, _, n = lax.while_loop(cond, sweep, (c0, jnp.asarray(True), jnp.asarray(0, jnp.int32)))
+        return c, n
+
+    def round_body(state):
+        colors, pending, rnd, conf_hist, sweeps = state
+        # OpenMP-static lockstep offsets over the pending set
+        r = pending.sum(dtype=jnp.int32)
+        bs = lax.div(r + P - 1, P)  # block size = supersteps this round
+        rank = jnp.cumsum(pending.astype(jnp.int32)) - 1
+        offset = jnp.where(pending, rank % jnp.maximum(bs, 1), 0).astype(jnp.int32)
+
+        colors, n_sweeps = phase1(colors, pending, offset)
+
+        # Phase 2 — conflicts among same-round pairs; higher index recolors.
+        cpad = jnp.concatenate([colors, jnp.zeros((1,), jnp.int32)])
+        ppad = jnp.concatenate([pending, jnp.zeros((1,), jnp.bool_)])
+        conf_e = ppad[src] & ppad[dst] & (cpad[src] == cpad[dst]) & (src > dst)
+        new_pending = (jnp.zeros((V,), jnp.int32)
+                       .at[src].max(conf_e.astype(jnp.int32), mode="drop")
+                       .astype(jnp.bool_))
+        conf_hist = conf_hist.at[rnd].set(new_pending.sum(dtype=jnp.int32))
+        return colors, new_pending, rnd + 1, conf_hist, sweeps + n_sweeps
+
+    def cond(state):
+        _, pending, rnd, _, _ = state
+        return jnp.logical_and(jnp.any(pending), rnd < max_rounds)
+
+    init = (
+        jnp.zeros((V,), jnp.int32),
+        jnp.ones((V,), jnp.bool_),
+        jnp.asarray(0, jnp.int32),
+        jnp.zeros((max_rounds,), jnp.int32),
+        jnp.asarray(0, jnp.int32),
+    )
+    colors, pending, rnd, conf_hist, sweeps = lax.while_loop(cond, round_body, init)
+    return colors, rnd, conf_hist, sweeps, jnp.any(pending)
+
+
+def color_iterative(
+    g: DeviceGraph,
+    concurrency: int = 64,
+    max_rounds: int = 64,
+    max_sweeps: int = 4096,
+    mex_fn=None,
+) -> ColoringResult:
+    """Run ITERATIVE with ``concurrency`` lockstep virtual threads.
+
+    ``mex_fn(colors, pending, offset)`` optionally replaces the sort-based
+    first-fit engine (e.g. the Pallas ELL kernel path from kernels/ops.py)."""
+    colors, rnd, conf_hist, sweeps, left = _iterative_impl(
+        g.src, g.dst, num_vertices=g.num_vertices,
+        concurrency=int(concurrency), max_rounds=max_rounds, max_sweeps=max_sweeps,
+        mex_fn=mex_fn,
+    )
+    if bool(left):
+        raise RuntimeError(f"ITERATIVE did not converge in {max_rounds} rounds")
+    return ColoringResult(colors=colors, rounds=int(rnd),
+                          conflicts_per_round=conf_hist, sweeps=int(sweeps))

@@ -1,0 +1,35 @@
+"""Coloring validity / quality metrics (host + device variants)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .graph import Graph, DeviceGraph
+
+
+def validate_coloring(graph: Graph, colors: np.ndarray) -> bool:
+    """True iff every vertex is colored (>0) and no edge is monochromatic."""
+    colors = np.asarray(colors)
+    if colors.shape[0] < graph.num_vertices or (colors[: graph.num_vertices] <= 0).any():
+        return False
+    src, dst = graph.directed_edges()
+    return not bool((colors[src] == colors[dst]).any())
+
+
+def count_conflicts(graph: Graph, colors: np.ndarray) -> int:
+    """Number of undirected monochromatic edges."""
+    src, dst = graph.directed_edges()
+    return int(((colors[src] == colors[dst]) & (src > dst)).sum())
+
+
+def num_colors(colors) -> int:
+    colors = np.asarray(colors)
+    return int(colors.max()) if colors.size else 0
+
+
+def device_conflict_edges(g: DeviceGraph, colors: jnp.ndarray) -> jnp.ndarray:
+    """Boolean mask over the directed edge list: monochromatic, src>dst."""
+    cpad = jnp.concatenate([colors, jnp.array([0], colors.dtype)])
+    cs = cpad[g.src]
+    cd = cpad[g.dst]
+    return (cs == cd) & (cs > 0) & (g.src > g.dst)

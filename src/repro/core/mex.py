@@ -1,0 +1,40 @@
+"""Vectorized segmented first-fit ("mex") — the TPU-native replacement for the
+paper's ``forbiddenColors`` stamped array + linear scan (Alg. 1, lines 5-6).
+
+Given a multiset of (vertex, forbidden-color) pairs, compute per vertex the
+minimum *positive* integer not present. The trick: lexicographically sort the
+pairs (two-key ``lax.sort`` — no int64 composite keys, TPU-friendly) and emit
+a candidate ``c+1`` wherever a "gap" occurs (next entry belongs to another
+vertex, or skips past ``c+1``); the segment-min of candidates is the mex.
+
+Callers must guarantee every live vertex contributes at least one entry; the
+canonical way is to append a synthetic ``(v, 0)`` pair per vertex (color 0 ==
+"uncolored" never collides with real colors >= 1 and seeds the candidate
+``1``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+_INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def segment_mex(vertex: jnp.ndarray, color: jnp.ndarray, num_vertices: int) -> jnp.ndarray:
+    """Per-vertex minimum excluded positive color.
+
+    vertex: [M] int32 ids in [0, num_vertices]; id == num_vertices is inert
+        padding (its segment is computed then discarded).
+    color:  [M] int32 >= 0 forbidden colors.
+    Returns [num_vertices] int32 mex (>= 1) — garbage for vertices with no
+    entries (callers append synthetic (v, 0) entries to avoid that).
+    """
+    v_s, c_s = lax.sort((vertex.astype(jnp.int32), color.astype(jnp.int32)), num_keys=2)
+    next_v = jnp.concatenate([v_s[1:], jnp.full((1,), num_vertices + 1, jnp.int32)])
+    next_c = jnp.concatenate([c_s[1:], jnp.zeros((1,), jnp.int32)])
+    seg_end = next_v != v_s
+    gap = seg_end | (next_c > c_s + 1)
+    cand = jnp.where(gap, c_s + 1, _INT32_MAX)
+    mex = jax.ops.segment_min(cand, v_s, num_segments=num_vertices + 1)
+    return mex[:num_vertices]

@@ -1,0 +1,83 @@
+"""R-MAT graph generator (Chakrabarti & Faloutsos), vectorized.
+
+Reproduces the paper's §4 test-graph methodology: recursive quadrant
+subdivision with parameters (a, b, c, d); the three paper settings are
+exported as :data:`RMAT_ER`, :data:`RMAT_G`, :data:`RMAT_B`. Duplicate edges
+and self-loops are removed downstream in ``Graph.from_edges`` exactly as the
+paper does ("the small variation in the number of edges is due to such
+removals").
+
+The paper additionally *randomly shuffles* vertex indices (§5.1 "Locality Not
+Exploited") so that R-MAT's low-index/high-degree artifact does not help
+caches; :func:`generate` exposes ``shuffle=True`` for the same reason.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from .graph import Graph
+
+# (a, b, c, d) — §4.1 of the paper.
+RMAT_ER: Tuple[float, float, float, float] = (0.25, 0.25, 0.25, 0.25)
+RMAT_G: Tuple[float, float, float, float] = (0.45, 0.15, 0.15, 0.25)
+RMAT_B: Tuple[float, float, float, float] = (0.55, 0.15, 0.15, 0.15)
+
+PAPER_PARAMS = {"RMAT-ER": RMAT_ER, "RMAT-G": RMAT_G, "RMAT-B": RMAT_B}
+
+
+def rmat_edges(
+    scale: int,
+    edge_factor: int,
+    params: Tuple[float, float, float, float],
+    seed: int = 0,
+) -> np.ndarray:
+    """Sample ``edge_factor * 2**scale`` raw (src, dst) pairs.
+
+    Vectorized over both edges and the ``scale`` recursion levels: each level
+    independently picks one of four quadrants with probs (a, b, c, d); the
+    row/col bits accumulate into the final coordinates.
+    """
+    a, b, c, d = params
+    if not np.isclose(a + b + c + d, 1.0):
+        raise ValueError("R-MAT parameters must sum to 1")
+    n_edges = edge_factor << scale
+    rng = np.random.default_rng(seed)
+    u = rng.random((n_edges, scale))
+    # quadrant: 0 -> (1,1)=a, 1 -> (1,2)=b, 2 -> (2,1)=c, 3 -> (2,2)=d
+    quad = (u >= a).astype(np.int8) + (u >= a + b).astype(np.int8) \
+        + (u >= a + b + c).astype(np.int8)
+    row_bit = (quad >= 2).astype(np.int64)   # quadrants c, d
+    col_bit = (quad % 2).astype(np.int64)    # quadrants b, d
+    weights = (1 << np.arange(scale, dtype=np.int64))[::-1]
+    src = row_bit @ weights
+    dst = col_bit @ weights
+    return np.stack([src, dst], axis=1)
+
+
+def generate(
+    scale: int,
+    edge_factor: int = 8,
+    params: Tuple[float, float, float, float] = RMAT_ER,
+    seed: int = 0,
+    shuffle: bool = True,
+) -> Graph:
+    """Generate an undirected R-MAT graph with ``2**scale`` vertices.
+
+    ``edge_factor=8`` matches the paper (|E| = 8·|V| undirected edges before
+    dedup, average degree ≈ 16).
+    """
+    n = 1 << scale
+    edges = rmat_edges(scale, edge_factor, params, seed)
+    g = Graph.from_edges(n, edges)
+    if shuffle:
+        rng = np.random.default_rng(seed + 0x5EED)
+        perm = rng.permutation(n).astype(np.int64)
+        g = g.relabel(perm)
+    return g
+
+
+def paper_graph(name: str, scale: int, seed: int = 0, shuffle: bool = True) -> Graph:
+    """One of the paper's three graph families at a chosen scale."""
+    return generate(scale, 8, PAPER_PARAMS[name], seed=seed, shuffle=shuffle)

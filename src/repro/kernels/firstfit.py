@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: blocked bitmask first-fit (the paper's Alg. 1 lines 5-6).
+
+The paper's inner loop marks neighbor colors in a ``forbiddenColors`` array
+and scans for the smallest free positive color. The TPU translation
+(DESIGN.md §2): the irregular neighbor-color *gather* is hoisted outside the
+kernel (XLA `take` — HBM-bandwidth bound, vectorized); the kernel consumes a
+dense ELL slab of neighbor colors and does the compute-hot part in VMEM:
+
+  * build a per-vertex forbidden **bitmask** (``W = C/32`` uint32 words) with
+    VPU shift/or ops — the register-resident analogue of ``forbiddenColors``;
+  * extract the minimum free bit by expanding words to bit lanes and
+    min-reducing candidate color values.
+
+Tiling: grid is (vertex tiles × neighbor-slot tiles). The forbidden mask
+lives in VMEM scratch and accumulates across the neighbor-slot (innermost,
+"arbitrary") grid dimension; the mex is computed and written on the last
+slot tile. Block shapes are (BV, BD) with BV a multiple of 8 and the bit-lane
+expansion a multiple of 128, matching VPU tiling.
+
+Colors are assumed < 32*W (the greedy bound Δ+1 makes W = ceil((Δ+2)/32)
+safe); the wrapper asserts this.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _firstfit_kernel(nbr_ref, out_ref, forb_ref, *, words: int, bd: int):
+    """One (vertex-tile, slot-tile) grid step.
+
+    nbr_ref:  [BV, BD] int32 neighbor colors (0 = no neighbor / uncolored)
+    out_ref:  [BV]     int32 mex output (written on last slot tile)
+    forb_ref: [BV, W]  uint32 VMEM scratch, persists across slot tiles
+    """
+    j = pl.program_id(1)
+    nd = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        # color 0 ("uncolored") is always forbidden: bit 0 of word 0
+        init = jnp.zeros(forb_ref.shape, jnp.uint32)
+        forb_ref[...] = init.at[:, 0].set(jnp.uint32(1))
+
+    colors = nbr_ref[...]                                  # [BV, BD] int32
+    word_idx = (colors >> 5).astype(jnp.int32)             # [BV, BD]
+    bit = (colors & 31).astype(jnp.uint32)
+    bitval = (jnp.uint32(1) << bit)                        # single set bit
+
+    # accumulate OR into each word: for word w, OR the bitvals whose
+    # word_idx == w. Single-bit values OR along the slot axis via lax.reduce.
+    acc = forb_ref[...]
+    contrib = jnp.where(
+        word_idx[:, :, None] == jax.lax.broadcasted_iota(jnp.int32, (1, 1, words), 2),
+        bitval[:, :, None],
+        jnp.uint32(0),
+    )                                                      # [BV, BD, W]
+    orred = jax.lax.reduce(contrib, jnp.uint32(0), jax.lax.bitwise_or, (1,))
+    forb_ref[...] = acc | orred
+
+    @pl.when(j == nd - 1)
+    def _finish():
+        forb = forb_ref[...]                               # [BV, W]
+        lanes = jax.lax.broadcasted_iota(jnp.uint32, (1, words, 32), 2)
+        bits = (forb[:, :, None] >> lanes) & jnp.uint32(1)  # [BV, W, 32]
+        value = (
+            jax.lax.broadcasted_iota(jnp.int32, (1, words, 32), 1) * 32
+            + jax.lax.broadcasted_iota(jnp.int32, (1, words, 32), 2)
+        )
+        cand = jnp.where(bits == 0, value, jnp.iinfo(jnp.int32).max)
+        out_ref[...] = jnp.min(cand.reshape(cand.shape[0], -1), axis=1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("words", "block_v", "block_d", "interpret")
+)
+def firstfit(
+    nbr_colors: jnp.ndarray,
+    *,
+    words: int = 16,
+    block_v: int = 512,
+    block_d: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Minimum excluded positive color per row of an ELL neighbor-color slab.
+
+    nbr_colors: [V, D] int32, entries in [0, 32*words); 0 = absent/uncolored.
+    Returns mex [V] int32 >= 1. V and D are padded internally to the block
+    shape (pad slots contribute color 0, which is always forbidden anyway).
+    """
+    v, d = nbr_colors.shape
+    vp = -(-v // block_v) * block_v
+    dp = -(-d // block_d) * block_d
+    x = jnp.zeros((vp, dp), jnp.int32).at[:v, :d].set(nbr_colors)
+    grid = (vp // block_v, dp // block_d)
+    out = pl.pallas_call(
+        functools.partial(_firstfit_kernel, words=words, bd=block_d),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_v, block_d), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block_v,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((vp,), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_v, words), jnp.uint32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(x)
+    return out[:v]

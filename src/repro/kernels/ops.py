@@ -1,0 +1,74 @@
+"""Jit'd wrappers wiring the Pallas kernels into the coloring engine.
+
+On this CPU container the kernels run with ``interpret=True`` (Pallas
+executes the kernel body in Python for correctness); on TPU the same calls
+compile to Mosaic. ``INTERPRET`` flips automatically based on the backend.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .firstfit import firstfit
+from .conflict import conflict_mask
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def ell_gather_colors(colors: jnp.ndarray, ell: jnp.ndarray) -> jnp.ndarray:
+    """Gather neighbor colors for an ELL adjacency slab.
+
+    colors: [V] int32 (0 = uncolored); ell: [V, D] int32 neighbor ids with
+    pad = V. Returns [V, D] int32 (pad slots -> 0). The gather stays outside
+    the kernel (DESIGN.md §2: regularize, then go fast).
+    """
+    cpad = jnp.concatenate([colors, jnp.zeros((1,), jnp.int32)])
+    return cpad[jnp.minimum(ell, colors.shape[0])]
+
+
+@functools.partial(jax.jit, static_argnames=("words", "interpret"))
+def ell_mex(colors: jnp.ndarray, ell: jnp.ndarray, *, words: int = 16,
+            interpret: bool | None = None) -> jnp.ndarray:
+    """mex per vertex from an ELL slab — kernel-powered Alg. 1 inner loop."""
+    nbr = ell_gather_colors(colors, ell)
+    return firstfit(nbr, words=words,
+                    interpret=INTERPRET if interpret is None else interpret)
+
+
+def make_kernel_mex_fn(ell: jnp.ndarray, words: int = 16):
+    """Build a ``mex_fn(colors, pending, offset)`` for ``color_iterative``
+    that routes the first-fit through the Pallas firstfit kernel.
+
+    The offset-precedence mask (committed neighbors always forbid; pending
+    neighbors forbid iff at a smaller superstep offset) is applied to the
+    gathered ELL neighbor-color slab before the kernel — the same
+    "regularize, then go fast" split as DESIGN.md §2."""
+    v = ell.shape[0]
+
+    def mex_fn(colors, pending, offset):
+        cpad = jnp.concatenate([colors, jnp.zeros((1,), jnp.int32)])
+        ppad = jnp.concatenate([pending, jnp.zeros((1,), jnp.bool_)])
+        opad = jnp.concatenate(
+            [offset, jnp.full((1,), jnp.iinfo(jnp.int32).max, jnp.int32)])
+        ell_safe = jnp.minimum(ell, v)
+        nbr_c = cpad[ell_safe]
+        forbids = ~ppad[ell_safe] | (opad[ell_safe] < offset[:, None])
+        nbr = jnp.where(forbids & (ell < v), nbr_c, 0)
+        return firstfit(nbr, words=words, interpret=INTERPRET)
+    return mex_fn
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def count_conflicts_kernel(colors: jnp.ndarray, src: jnp.ndarray,
+                           dst: jnp.ndarray, *, interpret: bool | None = None
+                           ) -> jnp.ndarray:
+    """Total conflicted edges via the Pallas conflict kernel."""
+    cpad = jnp.concatenate([colors, jnp.zeros((1,), jnp.int32)])
+    v = colors.shape[0]
+    cs = cpad[jnp.minimum(src, v)]
+    cd = cpad[jnp.minimum(dst, v)]
+    mask = conflict_mask(cs, cd, src, dst,
+                         interpret=INTERPRET if interpret is None else interpret)
+    return mask.sum(dtype=jnp.int32)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracles for the Pallas kernels (validation targets)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def firstfit_ref(nbr_colors: jnp.ndarray, num_colors_bound: int) -> jnp.ndarray:
+    """Oracle mex per row: smallest positive color absent from the row.
+
+    nbr_colors: [V, D] int32 (0 = absent/uncolored). Dense one-hot presence
+    over [0, C) — O(V*C) memory, fine at test scale.
+    """
+    v, d = nbr_colors.shape
+    c = num_colors_bound
+    present = (nbr_colors[:, :, None] == jnp.arange(c)[None, None, :]).any(axis=1)
+    present = present.at[:, 0].set(True)  # color 0 always forbidden
+    cand = jnp.where(~present, jnp.arange(c)[None, :], jnp.iinfo(jnp.int32).max)
+    return cand.min(axis=1).astype(jnp.int32)
+
+
+def conflict_mask_ref(colors_src, colors_dst, src, dst) -> jnp.ndarray:
+    """Oracle per-edge conflict mask (Alg. 2 line 13)."""
+    conf = (colors_src == colors_dst) & (colors_src > 0) & (src > dst)
+    return conf.astype(jnp.int32)

@@ -1,0 +1,3 @@
+# Launchers: mesh construction, multi-pod dry-run, training and serving
+# drivers. dryrun.py must be executed as __main__ (it sets XLA_FLAGS before
+# importing jax); the other modules are importable.

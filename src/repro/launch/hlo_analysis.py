@@ -1,0 +1,313 @@
+"""Post-SPMD HLO analysis for the roofline terms.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE, so any
+scanned-layers program under-reports FLOPs/bytes by ~n_layers (verified
+empirically — see EXPERIMENTS.md §Dry-run methodology). This module walks the
+optimized per-device HLO text instead and computes, with while-loop
+trip-count multipliers folded through the call graph:
+
+  * dot_flops       — 2 x prod(result dims) x prod(contracting dims) per
+                      ``dot`` (incl. dots inside fusion computations: they
+                      still occupy the MXU);
+  * boundary_bytes  — operand+result bytes of *top-level* ops in the entry /
+                      while bodies / conditional branches (fusion interiors
+                      excluded: only fusion boundaries touch HBM) — the HBM
+                      traffic model;
+  * collective bytes by kind — result-shape bytes of all-reduce/all-gather/
+                      reduce-scatter/all-to-all/collective-permute ops.
+
+All shapes in the SPMD module are per-device shard shapes, so every number
+is per-chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _dims(dim_str: str) -> List[int]:
+    return [int(d) for d in dim_str.split(",") if d]
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in _dims(dims):
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class HloStats:
+    dot_flops: float
+    boundary_bytes: float
+    collective_bytes_by_kind: Dict[str, float]
+    collective_counts: Dict[str, int]
+    while_trip_counts: List[int]
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.collective_bytes_by_kind.values())
+
+
+# --------------------------------------------------------------- parsing
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        # computation headers end with "{" and contain "->"; params may nest
+        # parens (tuple types), so don't regex the arg list
+        if stripped.endswith("{") and "->" in stripped and "=" not in stripped.split("(")[0]:
+            toks = stripped.split()
+            name = toks[1] if toks[0] == "ENTRY" else toks[0]
+            cur = name.split("(")[0].lstrip("%")
+            comps[cur] = []
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is not None and stripped and not stripped.startswith("//"):
+            comps[cur].append(stripped)
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> Optional[int]:
+    consts = {}
+    for ln in cond_lines:
+        m = re.match(r"%?([\w\.\-]+)\s*=\s*[su]32\[\]\s*constant\((\d+)\)", ln)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for ln in cond_lines:
+        if "compare(" in ln:
+            args = re.search(r"compare\(([^)]*)\)", ln)
+            if args:
+                for a in args.group(1).split(","):
+                    name = a.strip().split(" ")[-1].lstrip("%")
+                    if name in consts:
+                        return consts[name]
+    if consts:
+        return max(consts.values())
+    return None
+
+
+_CALL_REFS = re.compile(
+    r"(?:body|condition|to_apply|calls)=%?([\w\.\-]+)"
+    r"|branch_computations=\{([^}]*)\}")
+
+
+def _analyze_structure(comps: Dict[str, List[str]]):
+    """Returns (edges: caller -> [(callee, mult)], fusion_targets, trip_counts)."""
+    edges: Dict[str, List[Tuple[str, int]]] = {c: [] for c in comps}
+    fusion_targets = set()
+    apply_targets = set()
+    trips = []
+    for cname, lines in comps.items():
+        for ln in lines:
+            is_while = re.search(r"\bwhile\(", ln) is not None
+            tc = 1
+            if is_while:
+                # XLA annotates optimized whiles with the known trip count
+                mk = re.search(r'known_trip_count[":{]+n[":]+(\d+)', ln)
+                if mk:
+                    tc = int(mk.group(1))
+                else:
+                    mc = re.search(r"condition=%?([\w\.\-]+)", ln)
+                    if mc:
+                        t = _trip_count(comps.get(mc.group(1), []))
+                        tc = t if t else 1
+                trips.append(tc)
+            for m in _CALL_REFS.finditer(ln):
+                if m.group(1):
+                    callees = [m.group(1)]
+                else:
+                    callees = [c.strip().lstrip("%") for c in m.group(2).split(",")]
+                for callee in callees:
+                    if callee not in comps:
+                        continue
+                    k = tc if (is_while and "body=" in ln and
+                               f"body=%{callee}" in ln or
+                               is_while and f"body={callee}" in ln) else (tc if is_while else 1)
+                    edges[cname].append((callee, k))
+                    if "calls=" in ln and f"calls=%{callee}" in ln or f"calls={callee}" in ln:
+                        fusion_targets.add(callee)
+                    if "to_apply=" in ln and (f"to_apply=%{callee}" in ln or f"to_apply={callee}" in ln):
+                        apply_targets.add(callee)
+    return edges, fusion_targets, apply_targets, trips
+
+
+def _multipliers(comps, edges, entry_hint="main"):
+    entry = None
+    for name in comps:
+        if name.startswith(entry_hint) or name.startswith("jit_"):
+            entry = name
+            break
+    if entry is None and comps:
+        entry = next(iter(comps))
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+
+    import sys
+    sys.setrecursionlimit(10000)
+
+    def dfs(c, m, depth=0):
+        if depth > 50:
+            return
+        mult[c] = mult.get(c, 0.0) + m
+        for callee, k in edges.get(c, []):
+            dfs(callee, m * k, depth + 1)
+
+    if entry is not None:
+        dfs(entry, 1.0)
+    # computations never reached from entry (shouldn't happen) get 1x
+    for c in mult:
+        if mult[c] == 0.0:
+            mult[c] = 1.0
+    return mult, entry
+
+
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^={]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))")
+
+
+def _defs_of(lines: List[str]) -> Dict[str, str]:
+    """name -> result-type string for every instruction in a computation."""
+    defs = {}
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if m:
+            defs[m.group(1)] = m.group(2)
+    return defs
+
+
+def _dot_flops_of_line(ln: str, defs: Dict[str, str]) -> float:
+    """2 x prod(result) x prod(contracting dims) for a dot op. Operand types
+    come from the computation's symbol table (optimized HLO doesn't inline
+    them)."""
+    m_res = _DEF_RE.match(ln)
+    if not m_res:
+        return 0.0
+    ms = _SHAPE_RE.search(m_res.group(2))
+    if not ms:
+        return 0.0
+    result_dims = _dims(ms.group(2))
+    args = re.search(r"\bdot\(([^)]*)\)", ln)
+    if not args:
+        return 0.0
+    first = args.group(1).split(",")[0].strip()
+    mt = _SHAPE_RE.search(first)
+    if mt:
+        lhs_dims = _dims(mt.group(2))
+    else:
+        lhs_type = defs.get(first.split(" ")[-1].lstrip("%"), "")
+        mt = _SHAPE_RE.search(lhs_type)
+        if not mt:
+            return 0.0
+        lhs_dims = _dims(mt.group(2))
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ln)
+    contract = 1
+    if mc:
+        for d in _dims(mc.group(1)):
+            if d < len(lhs_dims):
+                contract *= lhs_dims[d]
+    mb = re.search(r"lhs_batch_dims=\{([\d,]*)\}", ln)
+    n = 1
+    for d in result_dims:
+        n *= d
+    return 2.0 * n * contract
+
+
+_SLICE_HINT = re.compile(r"dynamic-slice\(|\bgather\(|dynamic_slice|\bslice\(")
+_DUS_HINT = re.compile(r"dynamic-update-slice\(|dynamic_update_slice|\bscatter\(")
+
+
+def _op_boundary_bytes(ln: str, defs: Dict[str, str]) -> int:
+    """Operand + result bytes of one top-level op (HBM traffic proxy:
+    every fusion-boundary value is written once and read once).
+
+    Slice-like ops only touch the sliced region, not the whole buffer:
+    dynamic-slice/gather cost ~2x result; dynamic-update-slice/scatter cost
+    ~2x the update (smallest tensor operand). Detected from the op itself or
+    the fusion's op_name metadata."""
+    m = _DEF_RE.match(ln)
+    result_b = _shape_bytes(m.group(2)) if m else 0
+    arg_bytes = []
+    args = re.search(r"\w[\w\-\$]*\(([^)]*)\)", ln.split("=", 1)[-1])
+    if args:
+        for a in args.group(1).split(","):
+            name = a.strip().split(" ")[-1].lstrip("%")
+            if name in defs:
+                arg_bytes.append(_shape_bytes(defs[name]))
+    if _DUS_HINT.search(ln):
+        nz = [b for b in arg_bytes if b > 0]
+        upd = min(nz) if nz else result_b
+        return 2 * min(upd, result_b if result_b else upd)
+    if _SLICE_HINT.search(ln):
+        return 2 * result_b
+    return result_b + sum(arg_bytes)
+
+
+_SKIP_BYTES_OPS = re.compile(
+    r"=\s*(?:\w+\[[\d,]*\](?:\{[^}]*\})?|\([^)]*\))\s*"
+    r"(parameter|constant|iota|get-tuple-element|tuple|bitcast|copy-start|copy-done)\b")
+
+
+def analyze_hlo(hlo: str, entry_hint: str = "main") -> HloStats:
+    comps = _split_computations(hlo)
+    edges, fusion_targets, apply_targets, trips = _analyze_structure(comps)
+    mult, entry = _multipliers(comps, edges, entry_hint)
+
+    interior = fusion_targets | apply_targets
+    dot_flops = 0.0
+    boundary_bytes = 0.0
+    coll_bytes = {k: 0.0 for k in _COLLECTIVES}
+    coll_counts = {k: 0 for k in _COLLECTIVES}
+
+    for cname, lines in comps.items():
+        m = mult.get(cname, 1.0)
+        is_interior = cname in interior
+        defs = _defs_of(lines)
+        for ln in lines:
+            if " dot(" in ln:
+                dot_flops += _dot_flops_of_line(ln, defs) * m
+            if not is_interior:
+                if not _SKIP_BYTES_OPS.search(ln):
+                    boundary_bytes += _op_boundary_bytes(ln, defs) * m
+                for kind in _COLLECTIVES:
+                    if re.search(rf"=\s*[^=]*\b{kind}(?:-start)?\(", ln):
+                        type_str = ln.split("=", 1)[1].split(kind)[0]
+                        coll_bytes[kind] += _shape_bytes(type_str) * m
+                        coll_counts[kind] += 1
+                        break
+    return HloStats(
+        dot_flops=dot_flops,
+        boundary_bytes=boundary_bytes,
+        collective_bytes_by_kind=coll_bytes,
+        collective_counts=coll_counts,
+        while_trip_counts=trips,
+    )
+
+
+# Back-compat shim used by earlier callers
+def collective_stats(hlo: str, entry_hint: str = "main"):
+    st = analyze_hlo(hlo, entry_hint)
+
+    class _C:
+        bytes_by_kind = st.collective_bytes_by_kind
+        count_by_kind = st.collective_counts
+        total_bytes = st.collective_bytes
+    return _C()

@@ -1,0 +1,27 @@
+"""Production meshes.
+
+Single pod: 16 x 16 = 256 chips, axes ("data", "model").
+Multi-pod:  2 x 16 x 16 = 512 chips, axes ("pod", "data", "model"); the pod
+axis is data-parallel by default (DCN-friendly: only gradient all-reduce
+crosses pods) and can host pipeline stages via the PP feature flag.
+
+Functions, not module constants — importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS first).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(shape=None, axes=("data", "model")):
+    """Small mesh over whatever devices exist (tests/examples)."""
+    n = len(jax.devices())
+    if shape is None:
+        shape = (n, 1) if len(axes) == 2 else (n,)
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,78 @@
+"""Batched serving driver: prefill a batch of prompts, decode N tokens.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
+        --batch 8 --prompt-len 64 --gen 32
+
+Serving-path features: prefill-then-decode cache contract (tested per arch),
+greedy/temperature sampling, per-sequence cur_len, throughput report.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, get_smoke_config
+from .. import models
+
+
+def sample(logits, key, temperature: float):
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    params, _ = models.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    b, t = args.batch, args.prompt_len
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, t)), jnp.int32)
+    batch = {"tokens": prompts}
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jnp.asarray(
+            rng.normal(size=(b, cfg.vlm.num_image_tokens, cfg.d_model)), jnp.float32)
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(b, cfg.encdec.enc_seq, cfg.d_model)), jnp.float32)
+
+    max_len = t + args.gen
+    caches = models.init_cache(cfg, b, max_len)
+    t0 = time.time()
+    logits, _, caches = models.forward(cfg, params, batch, caches=caches)
+    prefill_s = time.time() - t0
+    step = jax.jit(lambda p, c, tok: models.decode_step(cfg, p, c, tok))
+    key = jax.random.PRNGKey(1)
+    tok = sample(logits[:, -1], key, args.temperature)
+
+    out = [tok]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        key, sub = jax.random.split(key)
+        logits_i, caches = step(params, caches, tok)
+        tok = sample(logits_i, sub, args.temperature)
+        out.append(tok)
+    decode_s = time.time() - t0
+    gen = np.stack([np.asarray(t_) for t_ in out], axis=1)
+    print(f"[serve] arch={cfg.name} batch={b} prompt={t} gen={args.gen}")
+    print(f"[serve] prefill: {prefill_s:.2f}s ({b*t/max(prefill_s,1e-9):.0f} tok/s)")
+    print(f"[serve] decode:  {decode_s:.2f}s ({b*(args.gen-1)/max(decode_s,1e-9):.1f} tok/s)")
+    print(f"[serve] sample row: {gen[0][:16].tolist()}")
+    return gen
+
+
+if __name__ == "__main__":
+    main()

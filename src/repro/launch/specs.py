@@ -1,0 +1,62 @@
+"""ShapeDtypeStruct input stand-ins + sharding builders for every
+(architecture x shape x mode) cell — weak-type-correct, shardable, zero
+allocation. Modality frontends are stubs: whisper gets precomputed frame
+embeddings, llama-vision gets pre-projected image tokens (per assignment).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import cache_spec as model_cache_spec
+from ..models.config import ModelConfig, ShapeConfig
+from ..parallel.sharding import Rules, spec_for_array
+from ..models.params import is_axes_leaf
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract training/prefill batch for one cell."""
+    b, s = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encdec.enc_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        out["image_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.vlm.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def batch_axes(cfg: ModelConfig) -> Dict[str, tuple]:
+    out = {"tokens": ("batch", None), "labels": ("batch", None)}
+    if cfg.family == "encdec":
+        out["frames"] = ("batch", None, None)
+    if cfg.family == "vlm":
+        out["image_embeds"] = ("batch", None, None)
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(caches abstract tree, caches axes, tokens abstract) for decode cells."""
+    shapes, axes = model_cache_spec(cfg, shape.global_batch, shape.seq_len)
+    tokens = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    return shapes, axes, tokens
+
+
+def tree_shardings(shape_tree, axes_tree, rules: Rules, mesh: Mesh):
+    """NamedSharding tree from (ShapeDtypeStruct tree, logical-axes tree)."""
+    def one(sds, axes):
+        return NamedSharding(mesh, spec_for_array(tuple(sds.shape), axes, rules, mesh))
+    return jax.tree.map(
+        one, shape_tree, axes_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct) or is_axes_leaf(x))
+
+
+def scalar_sharding(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,67 @@
+"""Model zoo: one composable stack, six families, ten assigned architectures.
+
+Public API (family-dispatched):
+    init_params(cfg, key)            -> (params, axes); key=None => abstract
+    forward(cfg, params, batch)      -> (logits, aux, caches|None)
+    loss_fn(cfg, params, batch)      -> (loss, metrics)
+    cache_spec(cfg, batch, max_len)  -> (abstract cache tree, axes tree)
+    init_cache(cfg, batch, max_len)  -> zeroed cache tree
+    decode_step(cfg, params, caches, tokens) -> (logits, caches')
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import (ModelConfig, ShapeConfig, SHAPES, MoEConfig, MLAConfig,
+                     SSMConfig, RGLRUConfig, EncDecConfig, VLMConfig)
+from . import transformer, whisper, counting
+
+
+def init_params(cfg: ModelConfig, key):
+    if cfg.family == "encdec":
+        return whisper.init_encdec(cfg, key)
+    return transformer.init_lm(cfg, key)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    if cfg.family == "encdec":
+        logits, aux, _ = whisper.forward(cfg, params, batch["tokens"], batch["frames"])
+        nll = transformer.chunked_xent(logits, batch["labels"])
+        return nll, {"nll": nll, "aux": jnp.zeros((), jnp.float32)}
+    return transformer.loss_fn(cfg, params, batch)
+
+
+def forward(cfg: ModelConfig, params, batch, caches=None):
+    if cfg.family == "encdec":
+        return whisper.forward(cfg, params, batch["tokens"], batch["frames"],
+                               caches=caches)
+    return transformer.forward(cfg, params, batch["tokens"],
+                               image_embeds=batch.get("image_embeds"),
+                               caches=caches)
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.family == "encdec":
+        return whisper.cache_spec(cfg, batch, max_len)
+    return transformer.cache_spec(cfg, batch, max_len)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    shapes, _ = cache_spec(cfg, batch, max_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def decode_step(cfg: ModelConfig, params, caches, tokens):
+    if cfg.family == "encdec":
+        return whisper.decode_step(cfg, params, caches, tokens)
+    return transformer.decode_step(cfg, params, caches, tokens)
+
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "SHAPES", "MoEConfig", "MLAConfig",
+    "SSMConfig", "RGLRUConfig", "EncDecConfig", "VLMConfig",
+    "init_params", "loss_fn", "forward", "cache_spec", "init_cache",
+    "decode_step", "counting",
+]

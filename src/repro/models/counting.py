@@ -1,0 +1,64 @@
+"""Parameter counting from the abstract (never-allocated) param tree.
+
+MODEL_FLOPS accounting for §Roofline: 6·N·D for dense training steps,
+6·N_active·D for MoE (N_active = non-expert params + top_k/E of routed
+expert params + shared experts).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def _abstract(cfg):
+    if cfg.family == "encdec":
+        from .whisper import init_encdec
+        params, _ = init_encdec(cfg, None)
+    else:
+        from .transformer import init_lm
+        params, _ = init_lm(cfg, None)
+    return params
+
+
+def _leaves_with_path(tree):
+    return jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))[0]
+
+
+def param_count(cfg) -> int:
+    return int(sum(int(np.prod(leaf.shape))
+                   for _, leaf in _leaves_with_path(_abstract(cfg))))
+
+
+def expert_param_count(cfg) -> int:
+    """Routed-expert params only (w_gate/w_up/w_down with an experts dim)."""
+    if cfg.moe is None:
+        return 0
+    total = 0
+    for path, leaf in _leaves_with_path(_abstract(cfg)):
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if keys and keys[-1] in ("w_gate", "w_up", "w_down"):
+            # routed experts have a num_experts dim
+            if cfg.moe.num_experts in leaf.shape:
+                total += int(np.prod(leaf.shape))
+    return total
+
+
+def active_param_count(cfg) -> int:
+    n = param_count(cfg)
+    if cfg.moe is None:
+        return n
+    routed = expert_param_count(cfg)
+    active_routed = routed * cfg.moe.top_k / cfg.moe.num_experts
+    return int(n - routed + active_routed)
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D (train) / 2·N·D (forward-only prefill) / 2·N per token (decode),
+    using active params for MoE."""
+    n = active_param_count(cfg)
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence

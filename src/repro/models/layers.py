@@ -1,0 +1,226 @@
+"""Core neural layers: RMSNorm, RoPE, chunked flash attention (global/local/
+causal/softcapped), GQA via grouped einsum, cache attention for decode, MLA
+(DeepSeek multi-head latent attention) with compressed cache + absorbed
+decode, and SwiGLU/GELU MLPs.
+
+Everything is a pure function over (params, activations); attention never
+materializes the full [Tq, Tk] score matrix — q and kv are both chunked with
+an online-softmax accumulator (flash-style), which is what makes the 32k
+prefill cells fit the per-chip HBM budget in the dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..parallel.sharding import constrain
+
+_NEG = -1e30
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    """RMSNorm with fp32 *reduction* but bf16 data path: only the [..., 1]
+    inverse-rms is fp32, so no [B, T, D] fp32 boundary tensors appear in
+    forward or backward (§Perf H-A3: the fp32 residual-sized collectives in
+    the backward pass came from the old all-fp32 formulation)."""
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = lax.rsqrt(ms + eps).astype(x.dtype)
+    return x * scale * (1.0 + w.astype(x.dtype))
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """Rotary embedding, split-half convention. x: [..., T, H, D], positions [..., T]."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angle = positions[..., :, None, None].astype(jnp.float32) * freq  # [..., T, 1, half]
+    cos, sin = jnp.cos(angle), jnp.sin(angle)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _softcap(s, cap: float):
+    if cap and cap > 0.0:
+        return jnp.tanh(s / cap) * cap
+    return s
+
+
+def flash_attention(
+    q, k, v, *,
+    q_positions, kv_positions,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    scale: Optional[float] = None,
+):
+    """Chunked online-softmax attention with GQA grouping.
+
+    q: [B, Tq, H, D]; k, v: [B, Tk, KH, Dk/Dv] with H % KH == 0. Never forms
+    [Tq, Tk]; peak score block is [B, KH, G, q_chunk, kv_chunk] fp32.
+    Returns [B, Tq, H, Dv].
+    """
+    b, tq, h, d = q.shape
+    _, tk, kh, dk = k.shape
+    dv = v.shape[-1]
+    g = h // kh
+    scale = scale if scale is not None else d ** -0.5
+
+    qc = min(q_chunk, tq)
+    kc = min(kv_chunk, tk)
+    tq_p = -(-tq // qc) * qc
+    tk_p = -(-tk // kc) * kc
+    qp = jnp.pad(q, ((0, 0), (0, tq_p - tq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, tk_p - tk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, tk_p - tk), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_positions, (0, tq_p - tq), constant_values=-1)
+    kpos = jnp.pad(kv_positions, (0, tk_p - tk), constant_values=jnp.iinfo(jnp.int32).max)
+
+    # [nq, B, KH, G, qc, D] / [nk, B, KH, kc, D]. Pin the KV-head sharding on
+    # the chunked operands so the q/kv loops stay collective-free — without
+    # this the SPMD partitioner re-gathers operands INSIDE the (remat'd
+    # backward) chunk loops, multiplying collective traffic by nq x nk
+    # (§Perf H-A2).
+    qb = (qp.reshape(b, tq_p // qc, qc, kh, g, d)
+          .transpose(1, 0, 3, 4, 2, 5))
+    kb = kp.reshape(b, tk_p // kc, kc, kh, dk).transpose(1, 0, 3, 2, 4)
+    vb = vp.reshape(b, tk_p // kc, kc, kh, dv).transpose(1, 0, 3, 2, 4)
+    qb = constrain(qb, (None, "batch", "kv_heads", None, None, None))
+    kb = constrain(kb, (None, "batch", "kv_heads", None, None))
+    vb = constrain(vb, (None, "batch", "kv_heads", None, None))
+    qpb = qpos.reshape(tq_p // qc, qc)
+    kpb = kpos.reshape(tk_p // kc, kc)
+
+    def q_step(qi):
+        q_i, qpos_i = qi  # [B, KH, G, qc, D], [qc]
+
+        def kv_step(carry, kv):
+            m, l, o = carry
+            k_j, v_j, kpos_j = kv
+            s = jnp.einsum("bkgqd,bksd->bkgqs", q_i, k_j,
+                           preferred_element_type=jnp.float32) * scale
+            s = _softcap(s, softcap)
+            valid = jnp.ones((qpos_i.shape[0], kpos_j.shape[0]), jnp.bool_)
+            if causal:
+                valid &= kpos_j[None, :] <= qpos_i[:, None]
+            if window and window > 0:
+                valid &= (qpos_i[:, None] - kpos_j[None, :]) < window
+            s = jnp.where(valid[None, None, None], s, _NEG)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            o_new = o * alpha[..., None] + jnp.einsum(
+                "bkgqs,bksd->bkgqd", p.astype(v_j.dtype), v_j,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((b, kh, g, q_i.shape[3]), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, q_i.shape[3]), jnp.float32)
+        o0 = jnp.zeros((b, kh, g, q_i.shape[3], dv), jnp.float32)
+        (m, l, o), _ = lax.scan(kv_step, (m0, l0, o0), (kb, vb, kpb))
+        return o / jnp.maximum(l, 1e-30)[..., None]
+
+    out = lax.map(q_step, (qb, qpb))  # [nq, B, KH, G, qc, Dv]
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(b, tq_p, h, dv)
+    return out[:, :tq].astype(q.dtype)
+
+
+def local_attention(q, k, v, *, window: int, q_positions, softcap: float = 0.0):
+    """Banded causal self-attention, O(T·window) FLOPs.
+
+    Processes w-sized query blocks against (previous + own) key blocks, so
+    arbitrarily long sequences cost 2·w keys per query block — this is what
+    makes gemma2/recurrentgemma local layers sub-quadratic.
+    """
+    b, t, h, d = q.shape
+    w = window
+    tp = -(-t // w) * w
+    n = tp // w
+
+    def blocks(x):
+        x = jnp.pad(x, ((0, 0), (0, tp - t)) + ((0, 0),) * (x.ndim - 2))
+        return x.reshape(b, n, w, *x.shape[2:])
+
+    qb, kb, vb = blocks(q), blocks(k), blocks(v)
+    pos = jnp.pad(q_positions, (0, tp - t), constant_values=-1).reshape(n, w)
+    # key positions pad with +inf so padded keys never pass the causal mask
+    # (the -1 query pad is harmless: padded outputs are sliced off)
+    posk_all = jnp.pad(q_positions, (0, tp - t),
+                       constant_values=jnp.iinfo(jnp.int32).max - 1).reshape(n, w)
+    # previous block (zeros/invalid for the first)
+    kprev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    pprev = jnp.concatenate(
+        [jnp.full((1, w), jnp.iinfo(jnp.int32).max - 1, pos.dtype), posk_all[:-1]],
+        axis=0)
+
+    def one_block(args):
+        q_i, k_i, v_i, kp_i, vp_i, posq, posk, pospk = args
+        kk = jnp.concatenate([kp_i, k_i], axis=1)
+        vv = jnp.concatenate([vp_i, v_i], axis=1)
+        pk = jnp.concatenate([pospk, posk], axis=0)
+        return flash_attention(
+            q_i, kk, vv, q_positions=posq, kv_positions=pk,
+            causal=True, window=w, softcap=softcap,
+            q_chunk=min(1024, w), kv_chunk=min(1024, 2 * w))
+
+    qb_ = qb.transpose(1, 0, 2, 3, 4)
+    kb_ = kb.transpose(1, 0, 2, 3, 4)
+    vb_ = vb.transpose(1, 0, 2, 3, 4)
+    kprev_ = kprev.transpose(1, 0, 2, 3, 4)
+    vprev_ = vprev.transpose(1, 0, 2, 3, 4)
+    out = lax.map(one_block, (qb_, kb_, vb_, kprev_, vprev_, pos, posk_all, pprev))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, tp, h, -1)
+    return out[:, :t].astype(q.dtype)
+
+
+def cache_attention(q, k_cache, v_cache, *, cur_len, window: int = 0,
+                    softcap: float = 0.0, scale: Optional[float] = None):
+    """Single-token decode attention over a [B, S, KH, D] cache.
+
+    The cache S dim may be sharded over the "model" mesh axis; XLA inserts
+    the LSE-combine collectives (partial max/sum/out all-reduce) — the
+    sequence-parallel decode scheme of DESIGN.md §6.
+    """
+    b, tq, h, d = q.shape
+    _, s, kh, dk = k_cache.shape
+    g = h // kh
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, tq, kh, g, d)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    scores = _softcap(scores, softcap)
+    kv_pos = jnp.arange(s)
+    valid = kv_pos[None, :] < cur_len[:, None]            # [B, S]
+    if window and window > 0:
+        valid &= kv_pos[None, :] >= (cur_len[:, None] - window)
+    scores = jnp.where(valid[:, None, None, None, :], scores, _NEG)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, tq, h, -1).astype(q.dtype)
+
+
+def mlp_apply(p, x, act: str):
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+def mlp_init(b, d_model: int, d_ff: int, act: str, *, ff_axis: str = "mlp",
+             embed_axis: str = "embed"):
+    if act == "swiglu":
+        b.dense("w_gate", (d_model, d_ff), (embed_axis, ff_axis))
+    b.dense("w_up", (d_model, d_ff), (embed_axis, ff_axis))
+    b.dense("w_down", (d_ff, d_model), (ff_axis, embed_axis))
+    return b

@@ -1,0 +1,177 @@
+"""Mamba-2 (SSD — state-space duality) blocks, chunk-parallel.
+
+The SSD algorithm splits the sequence into chunks: intra-chunk terms are
+dense matmuls (MXU-friendly quadratic-in-chunk work) and inter-chunk terms
+are a short scan over chunk states — O(T·chunk) total, the TPU-native way to
+run the recurrence. Decode keeps the O(1) recurrent state [H, P, N] plus a
+(conv_width-1)-deep conv tail, which is what makes the ``long_500k`` cell
+feasible (no KV cache at all).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig, SSMConfig
+
+
+def _dims(cfg: ModelConfig, s: SSMConfig):
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.headdim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def mamba2_init(b, cfg: ModelConfig, s: SSMConfig):
+    d = cfg.d_model
+    d_inner, n_heads, conv_dim = _dims(cfg, s)
+    b.dense("in_proj", (d, 2 * d_inner + 2 * s.n_groups * s.d_state + n_heads),
+            ("embed", "rnn"))
+    b.dense("conv_w", (s.conv_width, conv_dim), (None, "rnn"), scale=s.conv_width ** -0.5)
+    b.zeros("conv_b", (conv_dim,), ("rnn",))
+    b.zeros("A_log", (n_heads,), (None,))        # A = -exp(A_log)
+    b.zeros("dt_bias", (n_heads,), (None,))
+    b.zeros("D", (n_heads,), (None,))
+    b.zeros("norm_w", (d_inner,), ("rnn",))
+    b.dense("out_proj", (d_inner, d), ("rnn", "embed"))
+    return b
+
+
+def _split_proj(z_x_bc_dt, cfg, s):
+    d_inner, n_heads, _ = _dims(cfg, s)
+    gn = s.n_groups * s.d_state
+    z = z_x_bc_dt[..., :d_inner]
+    xbc = z_x_bc_dt[..., d_inner:d_inner + d_inner + 2 * gn]
+    dt = z_x_bc_dt[..., -n_heads:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, bias):
+    """Depthwise causal conv via shift-adds (width is tiny)."""
+    kw = w.shape[0]
+    out = xbc * w[kw - 1]
+    for i in range(1, kw):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[kw - 1 - i]
+    return jax.nn.silu(out + bias)
+
+
+def _segsum(x):
+    """[..., L] -> [..., L, L] lower-triangular segment sums (log-space)."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(xh, dtA, b_mat, c_mat, chunk: int, init_state=None):
+    """Chunked SSD. xh [B,T,H,P] (already dt-scaled), dtA [B,T,H] (log decay),
+    b_mat/c_mat [B,T,N] (single group). Returns (y [B,T,H,P], final_state
+    [B,H,P,N])."""
+    bsz, t, h, p = xh.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, t)
+    tp = -(-t // q) * q
+    pad = tp - t
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtA = jnp.pad(dtA, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    nc = tp // q
+    xc = xh.reshape(bsz, nc, q, h, p)
+    ac = dtA.reshape(bsz, nc, q, h).transpose(0, 3, 1, 2)       # [B,H,C,L]
+    bc = b_mat.reshape(bsz, nc, q, n)
+    cc = c_mat.reshape(bsz, nc, q, n)
+
+    a_cum = jnp.cumsum(ac, axis=-1)                              # [B,H,C,L]
+    # 1) intra-chunk (diagonal): L = exp(segsum(A))
+    l_mat = jnp.exp(_segsum(ac))                                 # [B,H,C,L,L]
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", cc, bc, l_mat, xc,
+                        preferred_element_type=jnp.float32)
+    # 2) per-chunk end states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)              # [B,H,C,L]
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", bc, decay_states, xc,
+                        preferred_element_type=jnp.float32)
+    # 3) inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(a_cum[..., -1])                        # [B,H,C]
+
+    def step(s_prev, inp):
+        st, dec = inp                                            # [B,H,P,N],[B,H]
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    s0 = (jnp.zeros((bsz, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    final, prev_states = lax.scan(
+        step,
+        s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)           # [B,C,H,P,N]
+    # 4) state -> output contribution
+    state_decay = jnp.exp(a_cum)                                 # [B,H,C,L]
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", cc, prev_states, state_decay,
+                       preferred_element_type=jnp.float32)
+    y = (y_diag + y_off).reshape(bsz, tp, h, p)[:, :t]
+    return y, final
+
+
+def mamba2_forward(p, x, cfg: ModelConfig, s: SSMConfig):
+    """Full-sequence SSD block. x [B,T,d] -> (y, final_state, conv_tail)."""
+    dt_ = x.dtype
+    d_inner, n_heads, conv_dim = _dims(cfg, s)
+    proj = x @ p["in_proj"].astype(dt_)
+    z, xbc_raw, dt_raw = _split_proj(proj, cfg, s)
+    # last (W-1) pre-conv inputs: the decode-time conv window tail
+    w = s.conv_width
+    conv_tail = jnp.pad(xbc_raw, ((0, 0), (w - 1, 0), (0, 0)))[:, -(w - 1):]
+    xbc = _causal_conv(xbc_raw, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_))
+    gn = s.n_groups * s.d_state
+    xs = xbc[..., :d_inner]
+    b_mat = xbc[..., d_inner:d_inner + gn]
+    c_mat = xbc[..., d_inner + gn:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))                 # [H]
+    dta = dt * a                                                 # [B,T,H]
+    xh = xs.reshape(*xs.shape[:2], n_heads, s.headdim)
+    xh_dt = (xh.astype(jnp.float32) * dt[..., None])
+    y, final = ssd_scan(xh_dt, dta, b_mat.astype(jnp.float32),
+                        c_mat.astype(jnp.float32), s.chunk)
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(*xs.shape[:2], d_inner).astype(dt_)
+    from .layers import rms_norm
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(dt_), final, conv_tail
+
+
+def mamba2_decode(p, x, state, conv_tail, cfg: ModelConfig, s: SSMConfig):
+    """One-token recurrent step. x [B,1,d]; state [B,H,P,N]; conv_tail
+    [B,conv_width-1,conv_dim]. Returns (y [B,1,d], state', conv_tail')."""
+    dt_ = x.dtype
+    d_inner, n_heads, conv_dim = _dims(cfg, s)
+    proj = x @ p["in_proj"].astype(dt_)
+    z, xbc, dt_raw = _split_proj(proj, cfg, s)                   # [B,1,*]
+    # conv over (tail ++ current)
+    window = jnp.concatenate([conv_tail, xbc], axis=1)           # [B,W,convdim]
+    w = p["conv_w"].astype(dt_)
+    conv_out = jnp.einsum("bwc,wc->bc", window, w) + p["conv_b"].astype(dt_)
+    xbc1 = jax.nn.silu(conv_out)[:, None]
+    new_tail = window[:, 1:]
+    gn = s.n_groups * s.d_state
+    xs = xbc1[..., :d_inner]
+    b_mat = xbc1[..., d_inner:d_inner + gn].astype(jnp.float32)[:, 0]   # [B,N]
+    c_mat = xbc1[..., d_inner + gn:].astype(jnp.float32)[:, 0]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))[:, 0]  # [B,H]
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a)                                      # [B,H]
+    xh = xs.reshape(-1, n_heads, s.headdim).astype(jnp.float32)  # [B,H,P]
+    state_new = (state * decay[..., None, None]
+                 + jnp.einsum("bhp,bn,bh->bhpn", xh, b_mat, dt))
+    y = jnp.einsum("bhpn,bn->bhp", state_new, c_mat)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(-1, 1, d_inner).astype(dt_)
+    from .layers import rms_norm
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(dt_), state_new, new_tail

@@ -1,0 +1,93 @@
+"""RG-LRU recurrent blocks (RecurrentGemma / Griffin).
+
+The temporal mix is a gated linear recurrence
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+    a_t = exp(-c * softplus(Lambda) * r_t),
+executed with ``lax.associative_scan`` — the parallel-scan primitive is the
+TPU-native substitute for a sequential RNN loop (log-depth, full VPU
+utilization). Decode is the O(1) single-step update; combined with the local
+attention layers' bounded window this gives the sub-quadratic ``long_500k``
+path for recurrentgemma.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig, RGLRUConfig
+
+_C = 8.0
+
+
+def rglru_init(b, cfg: ModelConfig, r: RGLRUConfig):
+    d = cfg.d_model
+    dr = r.d_rnn or d
+    b.dense("w_x", (d, dr), ("embed", "rnn"))
+    b.dense("w_gate_branch", (d, dr), ("embed", "rnn"))
+    b.dense("conv_w", (r.conv_width, dr), (None, "rnn"), scale=r.conv_width ** -0.5)
+    b.zeros("conv_b", (dr,), ("rnn",))
+    b.dense("w_r", (dr, dr), ("rnn", "rnn"))
+    b.zeros("b_r", (dr,), ("rnn",))
+    b.dense("w_i", (dr, dr), ("rnn", "rnn"))
+    b.zeros("b_i", (dr,), ("rnn",))
+    b.zeros("lambda_p", (dr,), ("rnn",))
+    b.dense("w_out", (dr, d), ("rnn", "embed"))
+    return b
+
+
+def _gates(p, u):
+    dt = u.dtype
+    r_g = jax.nn.sigmoid(u @ p["w_r"].astype(dt) + p["b_r"].astype(dt))
+    i_g = jax.nn.sigmoid(u @ p["w_i"].astype(dt) + p["b_i"].astype(dt))
+    log_a = (-_C * jax.nn.softplus(p["lambda_p"].astype(jnp.float32))
+             * r_g.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * (i_g.astype(jnp.float32) * u.astype(jnp.float32))
+
+
+def _conv(p, u):
+    w = p["conv_w"].astype(u.dtype)
+    kw = w.shape[0]
+    out = u * w[kw - 1]
+    for i in range(1, kw):
+        shifted = jnp.pad(u, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[kw - 1 - i]
+    return out + p["conv_b"].astype(u.dtype)
+
+
+def rglru_forward(p, x, cfg: ModelConfig, r: RGLRUConfig):
+    """Full-sequence Griffin recurrent block.
+    x [B,T,d] -> ([B,T,d], h_T, conv_tail)."""
+    dt = x.dtype
+    gate = jax.nn.gelu(x @ p["w_gate_branch"].astype(dt))
+    ux = x @ p["w_x"].astype(dt)
+    w = r.conv_width
+    conv_tail = jnp.pad(ux, ((0, 0), (w - 1, 0), (0, 0)))[:, -(w - 1):]
+    u = _conv(p, ux)
+    a, b = _gates(p, u)                                         # [B,T,dr] fp32
+
+    def combine(l, r_):
+        a1, b1 = l
+        a2, b2 = r_
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = lax.associative_scan(combine, (a, b), axis=1)
+    y = (h.astype(dt) * gate) @ p["w_out"].astype(dt)
+    return y, h[:, -1], conv_tail
+
+
+def rglru_decode(p, x, state, conv_tail, cfg: ModelConfig, r: RGLRUConfig):
+    """One-token step. x [B,1,d]; state [B,dr]; conv_tail [B,W-1,dr]."""
+    dt = x.dtype
+    gate = jax.nn.gelu(x @ p["w_gate_branch"].astype(dt))        # [B,1,dr]
+    ux = x @ p["w_x"].astype(dt)                                 # [B,1,dr]
+    window = jnp.concatenate([conv_tail, ux], axis=1)
+    w = p["conv_w"].astype(dt)
+    u = (jnp.einsum("bwc,wc->bc", window, w) + p["conv_b"].astype(dt))[:, None]
+    new_tail = window[:, 1:]
+    a, b = _gates(p, u)                                          # [B,1,dr]
+    h = state.astype(jnp.float32) * a[:, 0] + b[:, 0]            # [B,dr]
+    y = (h[:, None].astype(dt) * gate) @ p["w_out"].astype(dt)
+    return y, h, new_tail

@@ -1,0 +1,640 @@
+"""Composable decoder stack covering the dense / MoE / SSM / hybrid / VLM
+families (whisper's encoder-decoder lives in whisper.py on the same block
+machinery).
+
+An architecture is a (prefix, scanned-pattern × groups, suffix) list of
+``BlockSpec(attn, mlp)``; the scanned groups run under ``lax.scan`` with
+optional ``jax.checkpoint`` (remat), which keeps the HLO small, the compile
+times sane at 512 devices, and the activation footprint = one group per
+layer.
+
+Modes: ``full`` (train forward / prefill with cache fill) and ``decode``
+(one token against caches). Caches are plain pytrees so dry-run can lower
+``decode_step`` from ShapeDtypeStructs without ever running prefill.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig, MoEConfig
+from .params import ParamBuilder
+from . import layers as L
+from .moe import moe_init, moe_apply
+from .mla import mla_init, mla_forward, mla_decode
+from .mamba2 import mamba2_init, mamba2_forward, mamba2_decode, _dims as ssm_dims
+from .rglru import rglru_init, rglru_forward, rglru_decode
+from ..parallel.sharding import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    attn: str   # global | local | mla | ssd | rec | cross | enc
+    mlp: str    # dense | moe | none
+
+    @property
+    def key(self) -> str:
+        return f"{self.attn}_{self.mlp}"
+
+
+def arch_blocks(cfg: ModelConfig):
+    """(prefix, pattern, n_groups, suffix) of BlockSpecs for a config."""
+    if cfg.family == "ssm":
+        return [], [BlockSpec("ssd", "none")], cfg.num_layers, []
+    if cfg.family == "hybrid":
+        pat = [BlockSpec("rec", "dense"), BlockSpec("rec", "dense"),
+               BlockSpec("local", "dense")]
+        n = cfg.num_layers // len(pat)
+        rest = cfg.num_layers - n * len(pat)
+        suffix = [BlockSpec("rec", "dense")] * rest
+        return [], pat, n, suffix
+    if cfg.family == "vlm":
+        v = cfg.vlm
+        pat = [BlockSpec("global", "dense")] * (v.cross_every - 1) \
+            + [BlockSpec("cross", "dense")]
+        assert cfg.num_layers % v.cross_every == 0
+        return [], pat, cfg.num_layers // v.cross_every, []
+    if cfg.family == "moe":
+        attn = "mla" if cfg.mla is not None else "global"
+        nd = cfg.moe.first_dense_layers
+        prefix = [BlockSpec(attn, "dense")] * nd
+        return prefix, [BlockSpec(attn, "moe")], cfg.num_layers - nd, []
+    # dense
+    if cfg.layer_pattern == "local_global":
+        pat = [BlockSpec("local", "dense"), BlockSpec("global", "dense")]
+        assert cfg.num_layers % 2 == 0
+        return [], pat, cfg.num_layers // 2, []
+    return [], [BlockSpec("global", "dense")], cfg.num_layers, []
+
+
+# ------------------------------------------------------------------ init
+def _attn_init(b: ParamBuilder, cfg: ModelConfig, kv_axis="kv_heads"):
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    b.dense("wq", (d, h, hd), ("embed", "heads", None))
+    b.dense("wk", (d, kh, hd), ("embed", kv_axis, None))
+    b.dense("wv", (d, kh, hd), ("embed", kv_axis, None))
+    b.dense("wo", (h, hd, d), ("heads", None, "embed"))
+    if cfg.qk_norm:
+        b.zeros("q_norm", (hd,), (None,))
+        b.zeros("k_norm", (hd,), (None,))
+    return b
+
+
+def _cross_init(b: ParamBuilder, cfg: ModelConfig):
+    _attn_init(b, cfg)
+    b.zeros("gate_attn", (), ())
+    b.zeros("gate_mlp", (), ())
+    return b
+
+
+def _block_init(b: ParamBuilder, cfg: ModelConfig, spec: BlockSpec):
+    d = cfg.d_model
+    b.zeros("ln1", (d,), ("embed",))
+    if spec.attn in ("global", "local", "enc"):
+        _attn_init(b.child("attn"), cfg)
+    elif spec.attn == "cross":
+        b.zeros("ln_cross", (d,), ("embed",))
+        _cross_init(b.child("cross"), cfg)
+        _attn_init(b.child("attn"), cfg)
+    elif spec.attn == "mla":
+        mla_init(b.child("attn"), cfg, cfg.mla)
+    elif spec.attn == "ssd":
+        mamba2_init(b.child("attn"), cfg, cfg.ssm)
+    elif spec.attn == "rec":
+        rglru_init(b.child("attn"), cfg, cfg.rglru)
+    else:
+        raise ValueError(spec.attn)
+    if cfg.post_norms and spec.attn not in ("ssd",):
+        b.zeros("ln1_post", (d,), ("embed",))
+    if spec.mlp != "none":
+        b.zeros("ln2", (d,), ("embed",))
+        if spec.mlp == "moe":
+            moe_init(b.child("mlp"), cfg, cfg.moe)
+        else:
+            dff = cfg.d_ff
+            if cfg.moe is not None and cfg.moe.first_dense_d_ff:
+                dff = cfg.moe.first_dense_d_ff
+            L.mlp_init(b.child("mlp"), d, dff, cfg.act)
+        if cfg.post_norms:
+            b.zeros("ln2_post", (d,), ("embed",))
+    return b
+
+
+def init_lm(cfg: ModelConfig, key: Optional[jax.Array]):
+    """Build (params, axes). ``key=None`` -> abstract (ShapeDtypeStruct)."""
+    dt = jnp.dtype(cfg.param_dtype)
+    b = ParamBuilder(key, dt)
+    # embed std = d^-1/2: keeps tied logits ~unit-std (inputs re-scaled by
+    # sqrt(d) when emb_scale is set, the gemma convention)
+    b.dense("embed", (cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+            scale=cfg.d_model ** -0.5)
+    prefix, pattern, n_groups, suffix = arch_blocks(cfg)
+    for i, spec in enumerate(prefix):
+        _block_init(b.child(f"prefix{i}"), cfg, spec)
+    b.stacked_child(
+        "blocks", n_groups,
+        lambda bb: [_block_init(bb.child(f"b{j}"), cfg, s)
+                    for j, s in enumerate(pattern)])
+    for i, spec in enumerate(suffix):
+        _block_init(b.child(f"suffix{i}"), cfg, spec)
+    b.zeros("final_norm", (cfg.d_model,), ("embed",))
+    if not cfg.tie_embeddings:
+        b.dense("lm_head", (cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return b.build()
+
+
+# ------------------------------------------------------------------ apply
+def _attn_full(p, cfg, x, positions, spec, cache=None, *, causal=True):
+    """Self attention over a full sequence; optionally fills a cache."""
+    dt = x.dtype
+    # gather the sequence-parallel residual ONCE here (Megatron-SP style);
+    # without this XLA re-gathers inside the attention chunk loops
+    x = constrain(x, ("batch", None, None))
+    q = jnp.einsum("btd,dhe->bthe", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,dhe->bthe", x, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dhe->bthe", x, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = L.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if spec.attn != "enc":
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+    q = constrain(q, ("batch", None, "heads", None))
+    k = constrain(k, ("batch", None, "kv_heads", None))
+    if spec.attn == "local" and cfg.local_window:
+        out = L.local_attention(q, k, v, window=cfg.local_window,
+                                q_positions=positions, softcap=cfg.attn_softcap)
+    else:
+        out = L.flash_attention(
+            q, k, v, q_positions=positions, kv_positions=positions,
+            causal=causal, softcap=cfg.attn_softcap)
+    out = constrain(out, ("batch", None, "heads", None))
+    y = jnp.einsum("bthe,hed->btd", out, p["wo"].astype(dt))
+    new_cache = None
+    if cache is not None:
+        new_cache = _fill_kv_cache(cache, k, v, cfg, spec)
+    return y, new_cache
+
+
+def _fill_kv_cache(cache, k, v, cfg, spec):
+    t = k.shape[1]
+    if spec.attn == "local" and cfg.local_window:
+        w = cache["k"].shape[1]
+        tail_k, tail_v = k[:, -w:], v[:, -w:]
+        start = max(0, t - w)
+        slots = (start + jnp.arange(tail_k.shape[1])) % w
+        return {"k": cache["k"].at[:, slots].set(tail_k),
+                "v": cache["v"].at[:, slots].set(tail_v)}
+    return {"k": lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, 1),
+            "v": lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), 0, 1)}
+
+
+def _attn_decode(p, cfg, x, cache, cur_len, spec):
+    """Single-token attention against a cache (ring buffer for local)."""
+    dt = x.dtype
+    positions = cur_len[:, None]
+    q = jnp.einsum("btd,dhe->bthe", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,dhe->bthe", x, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dhe->bthe", x, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = L.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if spec.attn != "enc":
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+    b = x.shape[0]
+    s = cache["k"].shape[1]
+    if spec.attn == "local" and cfg.local_window:
+        w = s
+        slot = cur_len % w
+        kc = cache["k"].at[jnp.arange(b), slot].set(k[:, 0].astype(cache["k"].dtype))
+        vc = cache["v"].at[jnp.arange(b), slot].set(v[:, 0].astype(cache["v"].dtype))
+        # position held by ring slot j after writing position cur_len
+        slots = jnp.arange(w)
+        pos_of_slot = cur_len[:, None] - ((cur_len[:, None] - slots[None]) % w)
+        scores_len = jnp.where(pos_of_slot >= 0, pos_of_slot + 1, 0)
+        out = _ring_attention(q, kc, vc, pos_of_slot, cur_len, cfg.attn_softcap)
+    else:
+        kc = cache["k"].at[jnp.arange(b), cur_len].set(k[:, 0].astype(cache["k"].dtype))
+        vc = cache["v"].at[jnp.arange(b), cur_len].set(v[:, 0].astype(cache["v"].dtype))
+        out = L.cache_attention(q, kc, vc, cur_len=cur_len + 1,
+                                softcap=cfg.attn_softcap)
+    y = jnp.einsum("bthe,hed->btd", out, p["wo"].astype(dt))
+    return y, {"k": kc, "v": vc}
+
+
+def _ring_attention(q, kc, vc, pos_of_slot, cur_len, softcap):
+    """cache_attention over a ring buffer whose slot->position map varies."""
+    b, tq, h, d = q.shape
+    kh = kc.shape[2]
+    g = h // kh
+    qg = q.reshape(b, tq, kh, g, d)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, kc,
+                        preferred_element_type=jnp.float32) * d ** -0.5
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    valid = (pos_of_slot >= 0) & (pos_of_slot <= cur_len[:, None])
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(vc.dtype), vc,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, tq, h, -1).astype(q.dtype)
+
+
+def _cross_attn(p, cfg, x, img_kv):
+    """Gated cross attention to (precomputed) image K/V."""
+    dt = x.dtype
+    q = jnp.einsum("btd,dhe->bthe", x, p["wq"].astype(dt))
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"], cfg.norm_eps)
+    k, v = img_kv
+    tq = x.shape[1]
+    out = L.flash_attention(
+        q, k, v, q_positions=jnp.arange(tq), kv_positions=jnp.zeros((k.shape[1],), jnp.int32),
+        causal=False)
+    return jnp.einsum("bthe,hed->btd", out, p["wo"].astype(dt))
+
+
+def _image_kv(p, cfg, image_embeds):
+    dt = image_embeds.dtype
+    k = jnp.einsum("btd,dhe->bthe", image_embeds, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dhe->bthe", image_embeds, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        k = L.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return k, v
+
+
+def _mlp_part(p, cfg, spec, x):
+    aux = jnp.zeros((), jnp.float32)
+    if spec.mlp == "none":
+        return x, aux
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if spec.mlp == "moe":
+        y, aux = moe_apply(p["mlp"], h, cfg, cfg.moe)
+    else:
+        pm = {k2: v.astype(x.dtype) for k2, v in p["mlp"].items()}
+        hh = constrain(h, ("batch", None, None))
+        y = L.mlp_apply(pm, hh, cfg.act)
+    if cfg.post_norms:
+        y = L.rms_norm(y, p["ln2_post"], cfg.norm_eps)
+    return x + y, aux
+
+
+def block_apply_full(p, cfg: ModelConfig, spec: BlockSpec, x, positions,
+                     cache=None, image_kv=None):
+    """Train/prefill block. Returns (x, new_cache, aux)."""
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    new_cache = None
+    if spec.attn in ("global", "local", "enc"):
+        y, new_cache = _attn_full(p["attn"], cfg, h, positions, spec,
+                                  cache=cache, causal=(spec.attn != "enc"))
+    elif spec.attn == "cross":
+        y, new_cache = _attn_full(p["attn"], cfg, h, positions, spec, cache=cache)
+        if cfg.post_norms:
+            y = L.rms_norm(y, p["ln1_post"], cfg.norm_eps)
+        x = x + y
+        hc = L.rms_norm(x, p["ln_cross"], cfg.norm_eps)
+        yc = _cross_attn(p["cross"], cfg, hc, image_kv)
+        x = x + jnp.tanh(p["cross"]["gate_attn"].astype(x.dtype)) * yc
+        return _mlp_part(p, cfg, spec, x) + (new_cache,)
+    elif spec.attn == "mla":
+        y, kv = mla_forward(p["attn"], h, positions, cfg, cfg.mla)
+        if cache is not None:
+            ckv, kr = kv
+            new_cache = {
+                "ckv": lax.dynamic_update_slice_in_dim(
+                    cache["ckv"], ckv.astype(cache["ckv"].dtype), 0, 1),
+                "kr": lax.dynamic_update_slice_in_dim(
+                    cache["kr"], kr.astype(cache["kr"].dtype), 0, 1)}
+    elif spec.attn == "ssd":
+        y, state, tail = mamba2_forward(p["attn"], h, cfg, cfg.ssm)
+        if cache is not None:
+            new_cache = {"state": state, "conv": tail.astype(cache["conv"].dtype)}
+        x = x + y
+        return x, jnp.zeros((), jnp.float32), new_cache
+    elif spec.attn == "rec":
+        y, state, tail = rglru_forward(p["attn"], h, cfg, cfg.rglru)
+        if cache is not None:
+            new_cache = {"state": state, "conv": tail.astype(cache["conv"].dtype)}
+    else:
+        raise ValueError(spec.attn)
+    if cfg.post_norms:
+        y = L.rms_norm(y, p["ln1_post"], cfg.norm_eps)
+    x = x + y
+    out, aux = _mlp_part(p, cfg, spec, x)
+    return out, aux, new_cache
+
+
+def block_apply_decode(p, cfg: ModelConfig, spec: BlockSpec, x, cache, cur_len,
+                       image_kv=None):
+    """One-token block. Returns (x, new_cache)."""
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if spec.attn in ("global", "local", "enc"):
+        y, new_cache = _attn_decode(p["attn"], cfg, h, cache, cur_len, spec)
+    elif spec.attn == "cross":
+        y, new_cache = _attn_decode(p["attn"], cfg, h, cache["self"], cur_len, spec)
+        new_cache = {"self": new_cache, "img_k": cache["img_k"], "img_v": cache["img_v"]}
+        if cfg.post_norms:
+            y = L.rms_norm(y, p["ln1_post"], cfg.norm_eps)
+        x = x + y
+        hc = L.rms_norm(x, p["ln_cross"], cfg.norm_eps)
+        yc = _cross_attn(p["cross"], cfg, hc, (cache["img_k"], cache["img_v"]))
+        x = x + jnp.tanh(p["cross"]["gate_attn"].astype(x.dtype)) * yc
+        out, _ = _mlp_part(p, cfg, spec, x)
+        return out, new_cache
+    elif spec.attn == "mla":
+        b = x.shape[0]
+        # write this step's latent into the cache first
+        positions = cur_len[:, None]
+        from .mla import _project
+        qn, qr, ckv, kr = _project(p["attn"], h, positions, cfg.mla, cfg.norm_eps)
+        ckv_c = cache["ckv"].at[jnp.arange(b), cur_len].set(ckv[:, 0].astype(cache["ckv"].dtype))
+        kr_c = cache["kr"].at[jnp.arange(b), cur_len].set(kr[:, 0].astype(cache["kr"].dtype))
+        y, _ = mla_decode(p["attn"], h, ckv_c, kr_c, cur_len + 1, positions,
+                          cfg, cfg.mla)
+        new_cache = {"ckv": ckv_c, "kr": kr_c}
+    elif spec.attn == "ssd":
+        y, state, tail = mamba2_decode(p["attn"], h, cache["state"],
+                                       cache["conv"], cfg, cfg.ssm)
+        x = x + y
+        return x, {"state": state, "conv": tail}
+    elif spec.attn == "rec":
+        y, state, tail = rglru_decode(p["attn"], h, cache["state"],
+                                      cache["conv"], cfg, cfg.rglru)
+        new_cache = {"state": state, "conv": tail}
+    else:
+        raise ValueError(spec.attn)
+    if cfg.post_norms:
+        y = L.rms_norm(y, p["ln1_post"], cfg.norm_eps)
+    x = x + y
+    out, _ = _mlp_part(p, cfg, spec, x)
+    return out, new_cache
+
+
+# ------------------------------------------------------------------ caches
+def block_cache_spec(cfg: ModelConfig, spec: BlockSpec, batch: int, max_len: int):
+    """ShapeDtypeStructs + logical axes for one block's cache."""
+    kh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    cdt = jnp.dtype(cfg.dtype)
+    if spec.attn in ("global", "enc"):
+        s = {"k": jax.ShapeDtypeStruct((batch, max_len, kh, hd), cdt),
+             "v": jax.ShapeDtypeStruct((batch, max_len, kh, hd), cdt)}
+        a = {"k": ("cache_batch", "cache_seq", "kv_heads", None),
+             "v": ("cache_batch", "cache_seq", "kv_heads", None)}
+    elif spec.attn == "local":
+        w = min(cfg.local_window, max_len)
+        s = {"k": jax.ShapeDtypeStruct((batch, w, kh, hd), cdt),
+             "v": jax.ShapeDtypeStruct((batch, w, kh, hd), cdt)}
+        a = {"k": ("cache_batch", "cache_seq", "kv_heads", None),
+             "v": ("cache_batch", "cache_seq", "kv_heads", None)}
+    elif spec.attn == "cross":
+        inner_s, inner_a = block_cache_spec(
+            cfg, BlockSpec("global", spec.mlp), batch, max_len)
+        ti = cfg.vlm.num_image_tokens
+        s = {"self": inner_s,
+             "img_k": jax.ShapeDtypeStruct((batch, ti, kh, hd), cdt),
+             "img_v": jax.ShapeDtypeStruct((batch, ti, kh, hd), cdt)}
+        a = {"self": inner_a,
+             "img_k": ("cache_batch", None, "kv_heads", None),
+             "img_v": ("cache_batch", None, "kv_heads", None)}
+    elif spec.attn == "mla":
+        m = cfg.mla
+        s = {"ckv": jax.ShapeDtypeStruct((batch, max_len, m.kv_lora_rank), cdt),
+             "kr": jax.ShapeDtypeStruct((batch, max_len, m.rope_head_dim), cdt)}
+        a = {"ckv": ("cache_batch", "cache_seq", "kv_lora"),
+             "kr": ("cache_batch", "cache_seq", None)}
+    elif spec.attn == "ssd":
+        d_inner, n_heads, conv_dim = ssm_dims(cfg, cfg.ssm)
+        s = {"state": jax.ShapeDtypeStruct(
+                (batch, n_heads, cfg.ssm.headdim, cfg.ssm.d_state), jnp.float32),
+             "conv": jax.ShapeDtypeStruct(
+                (batch, cfg.ssm.conv_width - 1, conv_dim), cdt)}
+        a = {"state": ("cache_batch", None, None, None),
+             "conv": ("cache_batch", None, "rnn")}
+    elif spec.attn == "rec":
+        dr = cfg.rglru.d_rnn or cfg.d_model
+        s = {"state": jax.ShapeDtypeStruct((batch, dr), jnp.float32),
+             "conv": jax.ShapeDtypeStruct((batch, cfg.rglru.conv_width - 1, dr), cdt)}
+        a = {"state": ("cache_batch", "rnn"),
+             "conv": ("cache_batch", None, "rnn")}
+    else:
+        raise ValueError(spec.attn)
+    return s, a
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int):
+    """Abstract cache tree + axes tree for the whole model."""
+    prefix, pattern, n_groups, suffix = arch_blocks(cfg)
+    shapes: Dict[str, Any] = {}
+    axes: Dict[str, Any] = {}
+    for i, spec in enumerate(prefix):
+        shapes[f"prefix{i}"], axes[f"prefix{i}"] = block_cache_spec(cfg, spec, batch, max_len)
+    blk_s, blk_a = {}, {}
+    for j, spec in enumerate(pattern):
+        s, a = block_cache_spec(cfg, spec, batch, max_len)
+        blk_s[f"b{j}"] = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct((n_groups,) + x.shape, x.dtype), s,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        blk_a[f"b{j}"] = jax.tree.map(
+            lambda x: ("layers",) + tuple(x), a,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                e is None or isinstance(e, str) for e in x))
+    shapes["blocks"], axes["blocks"] = blk_s, blk_a
+    for i, spec in enumerate(suffix):
+        shapes[f"suffix{i}"], axes[f"suffix{i}"] = block_cache_spec(cfg, spec, batch, max_len)
+    shapes["cur_len"] = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    axes["cur_len"] = ("cache_batch",)
+    return shapes, axes
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    shapes, _ = cache_spec(cfg, batch, max_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+# ------------------------------------------------------------------ model
+def _embed(cfg, params, tokens):
+    x = params["embed"].astype(jnp.dtype(cfg.dtype))[tokens]
+    if cfg.emb_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def _logits(cfg, params, x):
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("btd,dv->btv", x, head.astype(x.dtype))
+    logits = constrain(logits, ("batch", None, "vocab"))
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits
+
+
+def forward(cfg: ModelConfig, params, tokens, *, image_embeds=None,
+            caches=None):
+    """Full-sequence forward. Returns (logits, aux_loss, new_caches|None)."""
+    prefix, pattern, n_groups, suffix = arch_blocks(cfg)
+    t = tokens.shape[1]
+    positions = jnp.arange(t, dtype=jnp.int32)
+    x = _embed(cfg, params, tokens)
+    x = constrain(x, ("batch", "seq", None))
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = {} if caches is not None else None
+
+    img_kv_per_group = None
+    if cfg.family == "vlm":
+        # image K/V are per cross-layer; computed on the fly inside the scan
+        image_embeds = image_embeds.astype(x.dtype)
+
+    for i, spec in enumerate(prefix):
+        c = caches.get(f"prefix{i}") if caches is not None else None
+        x, aux, nc = block_apply_full(params[f"prefix{i}"], cfg, spec, x,
+                                      positions, cache=c)
+        aux_total += aux
+        if new_caches is not None:
+            new_caches[f"prefix{i}"] = nc
+
+    def group_body(x, group_inp):
+        gp = group_inp["params"]
+        gc = group_inp.get("cache")
+        auxg = jnp.zeros((), jnp.float32)
+        ncache = {}
+        for j, spec in enumerate(pattern):
+            pj = gp[f"b{j}"]
+            cj = gc[f"b{j}"] if gc is not None else None
+            if spec.attn == "cross":
+                ikv = _image_kv(pj["cross"], cfg, image_embeds)
+                x, aux, nc = block_apply_full(pj, cfg, spec, x, positions,
+                                              cache=cj["self"] if cj else None,
+                                              image_kv=ikv)
+                if cj is not None:
+                    nc = {"self": nc, "img_k": ikv[0].astype(cj["img_k"].dtype),
+                          "img_v": ikv[1].astype(cj["img_v"].dtype)}
+            else:
+                x, aux, nc = block_apply_full(pj, cfg, spec, x, positions, cache=cj)
+            x = constrain(x, ("batch", "seq", None))
+            auxg += aux
+            if cj is not None:
+                ncache[f"b{j}"] = nc
+        return x, (auxg, ncache)
+
+    body = group_body
+    if cfg.remat:
+        body = jax.checkpoint(
+            group_body, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.scan_layers and n_groups > 1:
+        scan_inp = {"params": params["blocks"]}
+        if caches is not None:
+            scan_inp["cache"] = caches["blocks"]
+        x, (auxs, ncaches) = lax.scan(body, x, scan_inp)
+        aux_total += auxs.sum()
+        if new_caches is not None:
+            new_caches["blocks"] = ncaches
+    else:
+        for g in range(n_groups):
+            inp = {"params": jax.tree.map(lambda a: a[g], params["blocks"])}
+            if caches is not None:
+                inp["cache"] = jax.tree.map(lambda a: a[g], caches["blocks"])
+            x, (aux, nc) = body(x, inp)
+            aux_total += aux
+            if new_caches is not None:
+                new_caches.setdefault("_block_list", []).append(nc)
+        if new_caches is not None and "_block_list" in new_caches:
+            ncs = new_caches.pop("_block_list")
+            new_caches["blocks"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *ncs)
+
+    for i, spec in enumerate(suffix):
+        c = caches.get(f"suffix{i}") if caches is not None else None
+        x, aux, nc = block_apply_full(params[f"suffix{i}"], cfg, spec, x,
+                                      positions, cache=c)
+        aux_total += aux
+        if new_caches is not None:
+            new_caches[f"suffix{i}"] = nc
+
+    logits = _logits(cfg, params, x)
+    if new_caches is not None:
+        new_caches["cur_len"] = jnp.full((tokens.shape[0],), t, jnp.int32)
+    return logits, aux_total, new_caches
+
+
+def chunked_xent(logits, labels, t_chunk: int = 512):
+    """Mean next-token cross-entropy, chunked over the sequence so the fp32
+    logit upcast never materializes [B, T, V] (vocab stays mesh-sharded;
+    each chunk is [B, t_chunk, V])."""
+    b, t, v = logits.shape
+    tc = min(t_chunk, t)
+    if t % tc:
+        tc = t  # fall back for odd lengths (smoke shapes)
+    lg = logits.reshape(b, t // tc, tc, v).transpose(1, 0, 2, 3)
+    lb = labels.reshape(b, t // tc, tc).transpose(1, 0, 2)
+
+    def one(args):
+        lg_c, lb_c = args
+        lg32 = lg_c.astype(jnp.float32)
+        logz = jax.nn.logsumexp(lg32, axis=-1)
+        gold = jnp.take_along_axis(lg32, lb_c[..., None], axis=-1)[..., 0]
+        return (logz - gold).sum()
+
+    per_chunk = lax.map(one, (lg, lb))
+    return per_chunk.sum() / (b * t)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    """Mean next-token cross-entropy (+ MoE aux)."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    logits, aux, _ = forward(cfg, params, tokens,
+                             image_embeds=batch.get("image_embeds"))
+    nll = chunked_xent(logits, labels)
+    return nll + aux, {"nll": nll, "aux": aux}
+
+
+def decode_step(cfg: ModelConfig, params, caches, tokens):
+    """One decode step for the whole batch. tokens [B] int32; caches include
+    cur_len [B]. Returns (logits [B, vocab], new_caches)."""
+    prefix, pattern, n_groups, suffix = arch_blocks(cfg)
+    cur_len = caches["cur_len"]
+    x = _embed(cfg, params, tokens[:, None])
+    new_caches = {}
+    for i, spec in enumerate(prefix):
+        x, nc = block_apply_decode(params[f"prefix{i}"], cfg, spec, x,
+                                   caches[f"prefix{i}"], cur_len)
+        new_caches[f"prefix{i}"] = nc
+
+    def group_body(x, inp):
+        gp, gc = inp["params"], inp["cache"]
+        ncache = {}
+        for j, spec in enumerate(pattern):
+            x, nc = block_apply_decode(gp[f"b{j}"], cfg, spec, x,
+                                       gc[f"b{j}"], cur_len)
+            ncache[f"b{j}"] = nc
+        return x, ncache
+
+    if cfg.scan_layers and n_groups > 1:
+        x, ncaches = lax.scan(
+            group_body, x, {"params": params["blocks"], "cache": caches["blocks"]})
+        new_caches["blocks"] = ncaches
+    else:
+        ncs = []
+        for g in range(n_groups):
+            inp = {"params": jax.tree.map(lambda a: a[g], params["blocks"]),
+                   "cache": jax.tree.map(lambda a: a[g], caches["blocks"])}
+            x, nc = group_body(x, inp)
+            ncs.append(nc)
+        new_caches["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+
+    for i, spec in enumerate(suffix):
+        x, nc = block_apply_decode(params[f"suffix{i}"], cfg, spec, x,
+                                   caches[f"suffix{i}"], cur_len)
+        new_caches[f"suffix{i}"] = nc
+
+    logits = _logits(cfg, params, x)[:, 0]
+    new_caches["cur_len"] = cur_len + 1
+    return logits, new_caches

@@ -1,0 +1,197 @@
+"""Logical-axis sharding rules (FSDP × TP × SP × EP), MaxText-style.
+
+Params and activations are annotated with *logical* axis names; a ``Rules``
+table maps each logical name to mesh axes. The defaults implement:
+
+  batch       -> ("pod", "data")   data parallel (pod axis = DP by default)
+  seq         -> "model"           sequence parallelism between blocks
+  embed       -> "data"            ZeRO-3/FSDP shard of the non-TP param dim
+  heads/mlp/vocab -> "model"       tensor parallelism
+  experts     -> "model"           expert parallelism (deepseek; grok opts out
+                                   via MoEConfig.partition="tensor")
+
+Per-arch overrides: kv_heads stays replicated when the head count doesn't
+divide the model axis (e.g. starcoder2 kv=2 on model=16).
+
+``constrain`` applies ``with_sharding_constraint`` only when a rules context
+is active, so the same model code runs un-annotated on a single CPU device
+(smoke tests) and fully sharded under the production meshes (dry-run).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    table: Dict[str, MeshAxes]
+
+    def resolve(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        return self.table.get(logical, None)
+
+    def override(self, **kw) -> "Rules":
+        t = dict(self.table)
+        t.update(kw)
+        return Rules(t)
+
+    def pruned(self, mesh_axis_names) -> "Rules":
+        """Drop mesh axes absent from the target mesh (e.g. "pod" on the
+        single-pod mesh)."""
+        known = set(mesh_axis_names)
+
+        def prune(v):
+            if v is None:
+                return None
+            parts = (v,) if isinstance(v, str) else tuple(v)
+            kept = tuple(p for p in parts if p in known)
+            if not kept:
+                return None
+            return kept[0] if len(kept) == 1 else kept
+
+        return Rules({k: prune(v) for k, v in self.table.items()})
+
+
+def rules_for_mesh(mesh: "Mesh", base: "Rules" = None) -> "Rules":
+    return (base or DEFAULT_RULES).pruned(mesh.axis_names)
+
+
+DEFAULT_RULES = Rules({
+    "batch": ("pod", "data"),
+    "seq": "model",
+    "embed": "data",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "kv_lora": None,
+    "layers": None,
+    "cache_seq": "model",   # decode KV caches: sequence-sharded (LSE combine)
+    "cache_batch": ("pod", "data"),
+    "rnn": "model",
+    "state": None,
+})
+
+
+def _dedup(axes_tuple):
+    """Drop mesh axes already used by an earlier dim (PartitionSpec must not
+    repeat a mesh axis); later dims lose."""
+    used = set()
+    out = []
+    for a in axes_tuple:
+        if a is None:
+            out.append(None)
+            continue
+        parts = (a,) if isinstance(a, str) else tuple(a)
+        kept = tuple(p for p in parts if p not in used)
+        used.update(kept)
+        if not kept:
+            out.append(None)
+        elif len(kept) == 1:
+            out.append(kept[0])
+        else:
+            out.append(kept)
+    return tuple(out)
+
+
+def logical_to_spec(logical_axes: Sequence[Optional[str]], rules: Rules,
+                    mesh: Optional[Mesh] = None) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec.
+
+    Mesh-aware divisibility: if the mesh is provided, any mapping that does
+    not evenly divide is dropped for that dim (e.g. 8 kv heads on model=16
+    -> replicated), applied per-dim at spec build time by the caller via
+    ``shard_if_divisible`` since dim sizes live with the arrays.
+    """
+    resolved = tuple(rules.resolve(a) for a in logical_axes)
+    return P(*_dedup(resolved))
+
+
+def spec_for_array(shape: Tuple[int, ...], logical_axes, rules: Rules,
+                   mesh: Mesh) -> P:
+    """Like logical_to_spec but drops mappings whose mesh-axis product does
+    not divide the dim size (replicate instead of erroring)."""
+    resolved = list(rules.resolve(a) for a in logical_axes)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for i, r in enumerate(resolved):
+        if r is None:
+            continue
+        parts = (r,) if isinstance(r, str) else tuple(r)
+        prod = 1
+        for pp in parts:
+            prod *= sizes.get(pp, 1)
+        if prod == 0 or shape[i] % prod != 0:
+            resolved[i] = None
+    return P(*_dedup(tuple(resolved)))
+
+
+def params_shardings(param_shapes, param_axes, rules: Rules, mesh: Mesh):
+    """NamedSharding tree for a params tree (shapes tree + axes tree)."""
+    from ..models.params import is_axes_leaf
+
+    def one(shape_leaf, axes_leaf):
+        spec = spec_for_array(tuple(shape_leaf.shape), axes_leaf, rules, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, param_shapes, param_axes,
+                        is_leaf=lambda x: is_axes_leaf(x) or hasattr(x, "shape"))
+
+
+# ---------------------------------------------------------------- context
+_ctx = threading.local()
+
+
+def current_rules():
+    return getattr(_ctx, "rules", None)
+
+
+@contextlib.contextmanager
+def activation_rules(rules: Optional[Rules]):
+    """Enable ``constrain`` inside model code. No-op context when None."""
+    prev = getattr(_ctx, "rules", None)
+    _ctx.rules = rules
+    try:
+        yield
+    finally:
+        _ctx.rules = prev
+
+
+def constrain(x, logical_axes):
+    """with_sharding_constraint via the active rules (identity when absent).
+
+    Divisibility-aware: a mapping whose mesh-axis product doesn't divide the
+    dim size is dropped (replicated) instead of forcing XLA into padded
+    reshards — e.g. kv_heads=8 on model=16 (measured pathological: §Perf
+    H-A2 first attempt). Must run inside jit with a mesh context."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    except Exception:
+        sizes = {}
+    resolved = list(rules.resolve(a) for a in logical_axes)
+    if sizes:
+        for i, r in enumerate(resolved):
+            if r is None:
+                continue
+            parts = (r,) if isinstance(r, str) else tuple(r)
+            prod = 1
+            for pp in parts:
+                prod *= sizes.get(pp, 1)
+            if prod == 0 or x.shape[i] % prod != 0:
+                resolved[i] = None
+    spec = P(*_dedup(tuple(resolved)))
+    return jax.lax.with_sharding_constraint(x, spec)

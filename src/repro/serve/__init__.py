@@ -1,0 +1,13 @@
+"""Serving layer.
+
+The family-dispatched cache/decode primitives live in ``repro.models``
+(`cache_spec`, `init_cache`, `decode_step`, `forward(..., caches=)`) so each
+architecture's cache layout sits next to its math; this package re-exports
+them as the serving API and hosts the batched driver (`repro.launch.serve`).
+Cache sharding (sequence-sharded KV with LSE-combine collectives, ring
+buffers for local attention, O(1) recurrent states) is documented in
+DESIGN.md §6.
+"""
+from ..models import cache_spec, init_cache, decode_step, forward
+
+__all__ = ["cache_spec", "init_cache", "decode_step", "forward"]

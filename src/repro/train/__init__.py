@@ -1,0 +1,8 @@
+from .optimizer import AdamWConfig, init_opt_state, abstract_opt_state, adamw_update
+from .train_step import make_train_step, TrainStepConfig
+from . import checkpoint, data
+
+__all__ = [
+    "AdamWConfig", "init_opt_state", "abstract_opt_state", "adamw_update",
+    "make_train_step", "TrainStepConfig", "checkpoint", "data",
+]

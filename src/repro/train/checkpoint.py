@@ -1,0 +1,182 @@
+"""Fault-tolerant checkpointing: atomic, re-shardable, async-capable.
+
+Layout::
+
+    <dir>/step_000123/arrays.npz     flat {encoded-path: array}
+    <dir>/step_000123/manifest.json  step, keys, shapes, dtypes, checksum
+    <dir>/LATEST                     text file, updated last (commit point)
+
+Guarantees used by the elastic-restart story (DESIGN.md §6):
+  * atomicity — tmp-dir write + rename; LATEST only advances after fsync,
+    so a preempted writer never corrupts the previous checkpoint;
+  * re-shardability — restore takes ``shardings`` and device_puts each leaf
+    with the *new* mesh's NamedSharding, so a job may restart on a different
+    device count / mesh shape;
+  * retention — keep-last-k pruning;
+  * async — snapshot to host (device_get) synchronously, write in a
+    background thread (training continues).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+import jax
+
+_SEP = "/"
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}{_SEP}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}{_SEP}"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten_into(flat: Dict[str, Any], proto):
+    """Rebuild a tree shaped like ``proto`` from flat path->array."""
+    def build(sub, prefix=""):
+        if isinstance(sub, dict):
+            return {k: build(v, f"{prefix}{k}{_SEP}") for k, v in sub.items()}
+        if isinstance(sub, (list, tuple)):
+            t = [build(v, f"{prefix}{i}{_SEP}") for i, v in enumerate(sub)]
+            return type(sub)(t)
+        return flat[prefix[:-1]]
+    return build(proto)
+
+
+def step_dir(root: str, step: int) -> str:
+    return os.path.join(root, f"step_{step:08d}")
+
+
+def save(root: str, step: int, tree, *, keep: int = 3,
+         async_write: bool = False) -> threading.Thread | None:
+    """Checkpoint ``tree`` (any nested dict/list of arrays) at ``step``."""
+    os.makedirs(root, exist_ok=True)
+    flat = _flatten(tree)
+    host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    # npz can't represent ml_dtypes (bf16 etc.) — store a byte-compatible
+    # view and record the true dtype in the manifest for restore
+    true_dtypes = {k: str(v.dtype) for k, v in host.items()}
+    host = {k: (v.view(np.uint16) if v.dtype.itemsize == 2 and
+                v.dtype.kind == "V" or str(v.dtype) == "bfloat16" else v)
+            for k, v in host.items()}
+
+    def write():
+        tmp = step_dir(root, step) + ".tmp"
+        final = step_dir(root, step)
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{k.replace("/", "__"): v for k, v in host.items()})
+        digest = hashlib.sha256()
+        for k in sorted(host):
+            digest.update(k.encode())
+            digest.update(host[k].tobytes())
+        manifest = {
+            "step": step,
+            "keys": sorted(host.keys()),
+            "shapes": {k: list(v.shape) for k, v in host.items()},
+            "dtypes": true_dtypes,
+            "checksum": digest.hexdigest(),
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        latest = os.path.join(root, "LATEST")
+        with open(latest + ".tmp", "w") as f:
+            f.write(str(step))
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(latest + ".tmp", latest)
+        _prune(root, keep)
+
+    if async_write:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        return t
+    write()
+    return None
+
+
+def _prune(root: str, keep: int):
+    steps = all_steps(root)
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(step_dir(root, s), ignore_errors=True)
+
+
+def all_steps(root: str):
+    if not os.path.isdir(root):
+        return []
+    out = []
+    for name in os.listdir(root):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            try:
+                out.append(int(name[5:]))
+            except ValueError:
+                pass
+    return sorted(out)
+
+
+def latest_step(root: str) -> Optional[int]:
+    latest = os.path.join(root, "LATEST")
+    if os.path.exists(latest):
+        with open(latest) as f:
+            s = int(f.read().strip())
+        if os.path.isdir(step_dir(root, s)):
+            return s
+    steps = all_steps(root)
+    return steps[-1] if steps else None
+
+
+def restore(root: str, proto, *, step: Optional[int] = None,
+            shardings=None, verify: bool = True):
+    """Load a checkpoint into the structure of ``proto``.
+
+    ``shardings``: optional matching tree of NamedSharding — each leaf is
+    device_put with the *current* mesh (elastic restart onto a different
+    topology). Returns (tree, step).
+    """
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {root}")
+    d = step_dir(root, step)
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    npz = np.load(os.path.join(d, "arrays.npz"))
+    flat = {k.replace("__", "/"): npz[k] for k in npz.files}
+    if verify:
+        digest = hashlib.sha256()
+        for k in sorted(flat):
+            digest.update(k.encode())
+            digest.update(flat[k].tobytes())
+        if digest.hexdigest() != manifest["checksum"]:
+            raise IOError(f"checkpoint {d} failed checksum verification")
+    # view 2-byte stand-ins back to their true dtypes (bf16 etc.)
+    import ml_dtypes
+    for k, dt in manifest.get("dtypes", {}).items():
+        if k in flat and str(flat[k].dtype) != dt:
+            flat[k] = flat[k].view(np.dtype(dt))
+    tree = _unflatten_into(flat, proto)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree, step

@@ -1,0 +1,117 @@
+"""AdamW with fully-sharded optimizer state.
+
+Moments inherit the *parameter* sharding (ZeRO: every state shard lives with
+its param shard) and may be stored in bf16 (``moment_dtype``) — that is what
+fits grok-1-314B in 16 GB/chip (DESIGN.md §6). Schedule: linear warmup +
+cosine decay. All update math in fp32 regardless of storage dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    moment_dtype: str = "float32"   # "bfloat16" halves optimizer HBM
+
+
+def _is_leaf(x):
+    return hasattr(x, "shape") and hasattr(x, "dtype")
+
+
+def init_opt_state(params, cfg: AdamWConfig):
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_opt_state(param_shapes, cfg: AdamWConfig):
+    """ShapeDtypeStruct tree (dry-run lowering, no allocation)."""
+    mdt = jnp.dtype(cfg.moment_dtype)
+    sds = lambda p: jax.ShapeDtypeStruct(p.shape, mdt)
+    return {
+        "m": jax.tree.map(sds, param_shapes, is_leaf=_is_leaf),
+        "v": jax.tree.map(sds, param_shapes, is_leaf=_is_leaf),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def opt_state_axes(param_axes):
+    """Logical-axes tree matching init_opt_state (moments shard like params)."""
+    return {"m": param_axes, "v": param_axes, "step": ()}
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1.0) / max(1, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, grads, params, state, *, skip=None):
+    """One AdamW step. ``skip`` (bool scalar) freezes params/state (NaN-step
+    rejection, DESIGN.md §6 fault tolerance)."""
+    step = state["step"]
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip else jnp.asarray(1.0)
+    if skip is None:
+        skip = jnp.asarray(False)
+    skip = jnp.logical_or(skip, ~jnp.isfinite(gnorm))
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(g, p, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        u = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * u
+        # jnp.where (not arithmetic blend): 0 * NaN would poison the params
+        p_out = jnp.where(skip, p.astype(jnp.float32), p_new).astype(p.dtype)
+        m_out = jnp.where(skip, m.astype(jnp.float32), m32).astype(mdt)
+        v_out = jnp.where(skip, v.astype(jnp.float32), v32).astype(mdt)
+        return p_out, m_out, v_out
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(g, p, m, v) for g, p, m, v in zip(flat_g, flat_p, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_state = {
+        "m": jax.tree.unflatten(tdef, [o[1] for o in out]),
+        "v": jax.tree.unflatten(tdef, [o[2] for o in out]),
+        "step": step + jnp.where(skip, 0, 1).astype(jnp.int32),
+    }
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm,
+                                   "skipped": skip.astype(jnp.int32)}

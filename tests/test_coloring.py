@@ -1,0 +1,126 @@
+"""Coloring algorithm tests: serial oracle, ITERATIVE, DATAFLOW — the
+paper's correctness + quality claims (C1-C4 in DESIGN.md)."""
+import numpy as np
+import pytest
+
+from repro.core import (Graph, rmat, greedy_color, color_iterative,
+                        color_dataflow, dataflow_levels, validate_coloring,
+                        num_colors)
+
+GRAPHS = ["RMAT-ER", "RMAT-G", "RMAT-B"]
+
+
+def _graph(name, scale=10, seed=1):
+    return rmat.paper_graph(name, scale=scale, seed=seed)
+
+
+# ------------------------------------------------------------ serial oracle
+@pytest.mark.parametrize("name", GRAPHS)
+def test_greedy_valid(name):
+    g = _graph(name)
+    colors = greedy_color(g)
+    assert validate_coloring(g, colors)
+    assert colors.max() <= g.max_degree() + 1
+
+
+def test_greedy_path_graph_two_colors():
+    edges = np.array([[i, i + 1] for i in range(9)])
+    g = Graph.from_edges(10, edges)
+    assert greedy_color(g).max() == 2
+
+
+def test_greedy_complete_graph():
+    n = 8
+    edges = np.array([[i, j] for i in range(n) for j in range(i + 1, n)])
+    g = Graph.from_edges(n, edges)
+    colors = greedy_color(g)
+    assert colors.max() == n
+    assert validate_coloring(g, colors)
+
+
+# --------------------------------------------------------------- ITERATIVE
+@pytest.mark.parametrize("name", GRAPHS)
+@pytest.mark.parametrize("concurrency", [16, 128])
+def test_iterative_valid(name, concurrency):
+    g = _graph(name)
+    res = color_iterative(g.to_device(), concurrency=concurrency)
+    assert validate_coloring(g, np.asarray(res.colors))
+
+
+def test_iterative_p1_equals_serial():
+    """concurrency=1 degenerates to serial greedy: zero conflicts,
+    bit-identical colors (Alg. 2 -> Alg. 1)."""
+    g = _graph("RMAT-G")
+    res = color_iterative(g.to_device(), concurrency=1)
+    assert res.total_conflicts == 0
+    assert res.rounds == 1
+    np.testing.assert_array_equal(np.asarray(res.colors), greedy_color(g))
+
+
+@pytest.mark.parametrize("name", GRAPHS)
+def test_iterative_conflicts_grow_with_concurrency(name):
+    """Paper Fig. 10(a): conflicts increase with thread concurrency (C3)."""
+    g = _graph(name, scale=11)
+    confs = [color_iterative(g.to_device(), concurrency=p).total_conflicts
+             for p in [1, 16, 256]]
+    assert confs[0] == 0
+    assert confs[0] <= confs[1] <= confs[2]
+
+
+def test_iterative_conflicts_small_and_few_rounds():
+    """Paper C2: conflicts << |V| at realistic concurrency; few rounds."""
+    g = _graph("RMAT-B", scale=12)
+    res = color_iterative(g.to_device(), concurrency=16)
+    assert res.total_conflicts < 0.02 * g.num_vertices
+    assert res.rounds <= 6
+
+
+def test_iterative_color_quality_near_serial():
+    """Paper C1/Fig. 11: parallel colors ~= serial colors; the hostile
+    RMAT-B shows a modest increase at high concurrency (as in the paper)."""
+    for name in GRAPHS:
+        g = _graph(name, scale=11)
+        serial = num_colors(greedy_color(g))
+        par = color_iterative(g.to_device(), concurrency=128).num_colors
+        assert par <= int(1.35 * serial) + 2, (name, par, serial)
+        low = color_iterative(g.to_device(), concurrency=16).num_colors
+        assert low <= serial + 2, (name, low, serial)
+
+
+# ---------------------------------------------------------------- DATAFLOW
+@pytest.mark.parametrize("name", GRAPHS)
+def test_dataflow_identical_to_serial(name):
+    """C4: the dataflow fixpoint produces EXACTLY the serial greedy coloring
+    (priority = index, as on the XMT)."""
+    g = _graph(name)
+    res = color_dataflow(g.to_device())
+    np.testing.assert_array_equal(np.asarray(res.colors), greedy_color(g))
+
+
+def test_dataflow_sweeps_bounded_by_dag_depth():
+    """Chaotic iteration converges in AT MOST depth(DAG)+1 sweeps — and
+    often faster (it can beat the XMT's dataflow critical path, since
+    non-final inputs may coincidentally produce final values)."""
+    g = _graph("RMAT-G", scale=9)
+    res = color_dataflow(g.to_device())
+    _, depth = dataflow_levels(g.to_device())
+    assert 2 <= res.sweeps <= depth + 2
+
+
+def test_dataflow_levels_independent_sets():
+    """Vertices of one wavefront are pairwise non-adjacent."""
+    g = _graph("RMAT-B", scale=9)
+    lv, depth = dataflow_levels(g.to_device())
+    lv = np.asarray(lv)
+    src, dst = g.directed_edges()
+    assert not np.any(lv[src] == lv[dst]), "adjacent vertices share a level"
+
+
+def test_empty_and_isolated_graphs():
+    g = Graph.from_edges(5, np.zeros((0, 2), np.int64))
+    colors = greedy_color(g)
+    assert np.all(colors == 1)
+    res = color_iterative(g.to_device(), concurrency=4)
+    assert np.all(np.asarray(res.colors) == 1)
+    res2 = color_dataflow(g.to_device())
+    assert np.all(np.asarray(res2.colors) == 1)

@@ -1,0 +1,80 @@
+"""Graph container + R-MAT generator tests (paper §4)."""
+import numpy as np
+import pytest
+
+from repro.core import Graph, rmat, ordering
+
+
+def test_from_edges_dedup_selfloop():
+    edges = np.array([[0, 1], [1, 0], [0, 1], [2, 2], [1, 3]])
+    g = Graph.from_edges(4, edges)
+    assert g.num_edges == 2            # (0,1) and (1,3); self loop dropped
+    assert g.max_degree() == 2
+    src, dst = g.directed_edges()
+    assert len(src) == 4
+    assert not np.any(src == dst)
+
+
+def test_csr_consistency():
+    g = rmat.paper_graph("RMAT-G", scale=8, seed=3)
+    src, dst = g.directed_edges()
+    # symmetric: every (u,v) has (v,u)
+    fwd = set(zip(src.tolist(), dst.tolist()))
+    assert all((v, u) in fwd for (u, v) in fwd)
+    assert np.all(np.diff(g.row_ptr) >= 0)
+    assert g.row_ptr[-1] == len(dst)
+
+
+@pytest.mark.parametrize("name", ["RMAT-ER", "RMAT-G", "RMAT-B"])
+def test_rmat_structure_ordering(name):
+    """Paper Table 2: max degree and variance increase ER -> G -> B."""
+    g = rmat.paper_graph(name, scale=11, seed=0)
+    s = g.stats()
+    assert s["num_vertices"] == 2048
+    # dup/self-loop removal shrinks |E| (paper §4.1); hostile graphs lose
+    # more at small scale (dense subcommunities -> more duplicates)
+    assert 0.75 * 8 * 2048 <= s["num_edges"] <= 8 * 2048
+
+
+def test_rmat_hostility_ordering():
+    stats = {n: rmat.paper_graph(n, scale=11, seed=0).stats()
+             for n in ["RMAT-ER", "RMAT-G", "RMAT-B"]}
+    assert stats["RMAT-ER"]["max_degree"] < stats["RMAT-G"]["max_degree"] \
+        < stats["RMAT-B"]["max_degree"]
+    assert stats["RMAT-ER"]["degree_variance"] < stats["RMAT-G"]["degree_variance"] \
+        < stats["RMAT-B"]["degree_variance"]
+
+
+def test_ell_padding():
+    g = rmat.paper_graph("RMAT-ER", scale=7, seed=1)
+    ell, deg = g.to_ell()
+    assert ell.shape[0] == g.num_vertices
+    for v in range(g.num_vertices):
+        nbrs = set(g.col_idx[g.row_ptr[v]:g.row_ptr[v + 1]].tolist())
+        got = set(ell[v][ell[v] < g.num_vertices].tolist())
+        assert got == nbrs
+
+
+def test_relabel_preserves_structure():
+    g = rmat.paper_graph("RMAT-G", scale=8, seed=2)
+    perm = np.random.default_rng(0).permutation(g.num_vertices).astype(np.int64)
+    g2 = g.relabel(perm)
+    assert g2.num_edges == g.num_edges
+    assert g2.max_degree() == g.max_degree()
+
+
+def test_orderings_are_permutations():
+    g = rmat.paper_graph("RMAT-B", scale=8, seed=2)
+    for name, fn in ordering.ORDERINGS.items():
+        o = fn(g, seed=1)
+        assert sorted(o.tolist()) == list(range(g.num_vertices)), name
+
+
+def test_smallest_last_degeneracy():
+    # smallest-last ordering: max back-degree == degeneracy <= max degree
+    g = rmat.paper_graph("RMAT-B", scale=8, seed=5)
+    o = ordering.smallest_degree_last(g)
+    g2 = ordering.apply(g, o)
+    from repro.core import greedy_color
+    c1 = greedy_color(g2)
+    assert c1.max() <= g.max_degree() + 1

@@ -1,0 +1,61 @@
+"""HLO analyzer unit tests — the roofline's measurement instrument."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.launch.hlo_analysis import analyze_hlo, _shape_bytes
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[4,8]") == 128
+    assert _shape_bytes("bf16[10]") == 20
+    assert _shape_bytes("(f32[2], s8[3])") == 11
+    assert _shape_bytes("pred[]") == 1  # scalar has empty dims -> 1 elem
+
+
+def test_scan_trip_count_and_dot_flops():
+    w = jnp.zeros((16, 64, 64), jnp.float32)
+    x = jnp.ones((4, 64), jnp.float32)
+
+    def f(x, w):
+        def body(c, wi):
+            return c @ wi, None
+        y, _ = lax.scan(body, x, w)
+        return y.sum()
+
+    c = jax.jit(f).lower(x, w).compile()
+    st = analyze_hlo(c.as_text())
+    assert 16 in st.while_trip_counts
+    expect = 16 * 2 * 4 * 64 * 64
+    assert abs(st.dot_flops - expect) / expect < 1e-6
+
+
+def test_nested_scan_multiplier():
+    w = jnp.zeros((4, 3, 32, 32), jnp.float32)
+    x = jnp.ones((2, 32), jnp.float32)
+
+    def f(x, w):
+        def outer(c, wo):
+            def inner(ci, wi):
+                return ci @ wi, None
+            c2, _ = lax.scan(inner, c, wo)
+            return c2, None
+        y, _ = lax.scan(outer, x, w)
+        return y.sum()
+
+    c = jax.jit(f).lower(x, w).compile()
+    st = analyze_hlo(c.as_text())
+    expect = 4 * 3 * 2 * 2 * 32 * 32
+    assert abs(st.dot_flops - expect) / expect < 1e-6
+
+
+def test_unrolled_matmul_counted_once():
+    a = jnp.ones((8, 128), jnp.float32)
+    b = jnp.ones((128, 16), jnp.float32)
+    c = jax.jit(lambda a, b: a @ b).lower(a, b).compile()
+    st = analyze_hlo(c.as_text())
+    expect = 2 * 8 * 128 * 16
+    assert abs(st.dot_flops - expect) / expect < 1e-6
+    # boundary bytes at least inputs+outputs
+    assert st.boundary_bytes >= (8 * 128 + 128 * 16 + 8 * 16) * 4

@@ -1,0 +1,147 @@
+"""Numerical layer tests: flash vs exact attention, local banding, softcap,
+rope, SSD chunking vs sequential recurrence, RG-LRU scan vs loop."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (flash_attention, local_attention,
+                                 cache_attention, rope, rms_norm)
+from repro.models.mamba2 import ssd_scan
+from repro.models.rglru import rglru_forward, rglru_decode, rglru_init
+from repro.models.params import ParamBuilder
+from repro.models.config import ModelConfig, RGLRUConfig
+
+
+def _exact_attention(q, k, v, causal=True, window=0, softcap=0.0):
+    b, tq, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, tq, kh, g, d)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * d ** -0.5
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    tk = k.shape[1]
+    qp = jnp.arange(tq)[:, None]
+    kp = jnp.arange(tk)[None, :]
+    valid = jnp.ones((tq, tk), bool)
+    if causal:
+        valid &= kp <= qp
+    if window:
+        valid &= (qp - kp) < window
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+    return o.reshape(b, tq, h, d)
+
+
+@pytest.mark.parametrize("t,h,kh,d", [(33, 4, 4, 16), (64, 8, 2, 32), (100, 4, 1, 8)])
+@pytest.mark.parametrize("chunks", [(16, 16), (64, 32), (1024, 1024)])
+def test_flash_matches_exact(t, h, kh, d, chunks):
+    rng = np.random.default_rng(t + h)
+    q = jnp.asarray(rng.normal(size=(2, t, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, t, kh, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, t, kh, d)), jnp.float32)
+    pos = jnp.arange(t, dtype=jnp.int32)
+    got = flash_attention(q, k, v, q_positions=pos, kv_positions=pos,
+                          causal=True, q_chunk=chunks[0], kv_chunk=chunks[1])
+    want = _exact_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("softcap", [0.0, 30.0])
+@pytest.mark.parametrize("window", [8, 16, 128])
+def test_local_matches_exact(window, softcap):
+    rng = np.random.default_rng(window)
+    t, h, kh, d = 50, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(2, t, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, t, kh, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, t, kh, d)), jnp.float32)
+    pos = jnp.arange(t, dtype=jnp.int32)
+    got = local_attention(q, k, v, window=window, q_positions=pos, softcap=softcap)
+    want = _exact_attention(q, k, v, window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_cache_attention_masks_by_cur_len():
+    rng = np.random.default_rng(0)
+    b, s, h, d = 2, 16, 2, 8
+    q = jnp.asarray(rng.normal(size=(b, 1, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    out_a = cache_attention(q, k, v, cur_len=jnp.asarray([4, 16]))
+    # zero out the cache beyond cur_len: result must not change
+    mask = (jnp.arange(s)[None, :, None, None] <
+            jnp.asarray([4, 16])[:, None, None, None])
+    out_b = cache_attention(q, k * mask, v * mask, cur_len=jnp.asarray([4, 16]))
+    np.testing.assert_allclose(np.asarray(out_a), np.asarray(out_b), atol=1e-6)
+
+
+def test_rope_orthogonal_and_relative():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1, 8, 2, 16)), jnp.float32)
+    pos = jnp.arange(8, dtype=jnp.int32)
+    y = rope(x, pos)
+    # norms preserved (rotation)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, 16)), jnp.float32)
+    def dot_at(i, j):
+        qi = rope(q, jnp.asarray([i]))
+        kj = rope(k, jnp.asarray([j]))
+        return float((qi * kj).sum())
+    assert abs(dot_at(3, 1) - dot_at(10, 8)) < 1e-4
+
+
+def test_ssd_chunked_matches_sequential():
+    """Chunked SSD == naive per-step recurrence."""
+    rng = np.random.default_rng(0)
+    b, t, h, p, n = 2, 24, 3, 4, 8
+    x = jnp.asarray(rng.normal(size=(b, t, h, p)), jnp.float32)
+    dta = jnp.asarray(-np.abs(rng.normal(size=(b, t, h))) * 0.3, jnp.float32)
+    bm = jnp.asarray(rng.normal(size=(b, t, n)), jnp.float32)
+    cm = jnp.asarray(rng.normal(size=(b, t, n)), jnp.float32)
+    for chunk in [4, 8, 24]:
+        y, final = ssd_scan(x, dta, bm, cm, chunk)
+        # sequential reference
+        s = np.zeros((b, h, p, n))
+        ys = np.zeros((b, t, h, p))
+        for i in range(t):
+            a = np.exp(np.asarray(dta[:, i]))                  # [b,h]
+            s = s * a[..., None, None] + np.einsum(
+                "bhp,bn->bhpn", np.asarray(x[:, i]), np.asarray(bm[:, i]))
+            ys[:, i] = np.einsum("bhpn,bn->bhp", s, np.asarray(cm[:, i]))
+        np.testing.assert_allclose(np.asarray(y), ys, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(final), s, atol=1e-4)
+
+
+def test_rglru_scan_matches_stepwise():
+    cfg = ModelConfig(name="t", family="hybrid", num_layers=1, d_model=16,
+                      n_heads=2, n_kv_heads=1, d_ff=32, vocab_size=64,
+                      rglru=RGLRUConfig(d_rnn=16))
+    b = ParamBuilder(jax.random.PRNGKey(0), jnp.float32)
+    rglru_init(b, cfg, cfg.rglru)
+    p, _ = b.build()
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 10, 16)) * 0.5, jnp.float32)
+    y_full, h_final, tail = rglru_forward(p, x, cfg, cfg.rglru)
+    # stepwise
+    state = jnp.zeros((2, 16), jnp.float32)
+    ctail = jnp.zeros((2, cfg.rglru.conv_width - 1, 16), jnp.float32)
+    outs = []
+    for i in range(10):
+        y, state, ctail = rglru_decode(p, x[:, i:i+1], state, ctail, cfg, cfg.rglru)
+        outs.append(y)
+    y_step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_step), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(h_final), np.asarray(state), atol=2e-5)
+
+
+def test_rms_norm_unit_scale():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 64)) * 7, jnp.float32)
+    y = rms_norm(x, jnp.zeros(64))
+    rms = np.sqrt((np.asarray(y) ** 2).mean(-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)

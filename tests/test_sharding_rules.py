@@ -1,0 +1,53 @@
+"""Logical-axis sharding rule unit tests (no multi-device needed)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import (DEFAULT_RULES, Rules, logical_to_spec,
+                                     spec_for_array, rules_for_mesh)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_basic_mapping(mesh):
+    rules = rules_for_mesh(mesh)
+    spec = logical_to_spec(("embed", "mlp"), rules)
+    assert spec == P("data", "model")
+
+
+def test_pod_pruned_on_single_pod(mesh):
+    rules = rules_for_mesh(mesh)
+    assert rules.resolve("batch") == ("data",) or rules.resolve("batch") == "data"
+
+
+def test_dedup_repeated_axis():
+    rules = Rules({"a": "model", "b": "model"})
+    spec = logical_to_spec(("a", "b"), rules)
+    assert spec == P("model", None)  # later dim loses the contested axis
+
+
+def test_divisibility_drop():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = type("D", (), {"shape": (4, 16)})()
+
+    rules = rules_for_mesh(FakeMesh, DEFAULT_RULES)
+    # kv_heads = 8 does not divide model=16 -> replicated
+    spec = spec_for_array((2, 128, 8, 64), ("batch", None, "kv_heads", None),
+                          rules, FakeMesh)
+    assert spec[2] is None
+    # heads = 32 divides -> sharded
+    spec2 = spec_for_array((2, 128, 32, 64), ("batch", None, "heads", None),
+                           rules, FakeMesh)
+    assert spec2[2] == "model"
+
+
+def test_override():
+    r = DEFAULT_RULES.override(experts=None)
+    assert r.resolve("experts") is None
+    assert r.resolve("heads") == "model"

@@ -1,0 +1,70 @@
+"""Input-spec stand-ins, cache specs, and FLOPs/param accounting."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import counting, cache_spec
+from repro.models.config import SHAPES
+from repro.launch import specs as S
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_batch_specs_abstract(arch):
+    cfg = get_config(arch)
+    shape = SHAPES["train_4k"]
+    b = S.batch_specs(cfg, shape)
+    assert b["tokens"].shape == (256, 4096)
+    assert b["tokens"].dtype == jnp.int32
+    if cfg.family == "vlm":
+        assert b["image_embeds"].shape[1] == cfg.vlm.num_image_tokens
+    if cfg.family == "encdec":
+        assert b["frames"].shape[1] == cfg.encdec.enc_seq
+    # axes tree matches structurally
+    axes = S.batch_axes(cfg)
+    assert set(axes) == set(b)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_cache_spec_matches_init_cache(arch):
+    """Abstract cache specs must mirror the concrete cache exactly — the
+    dry-run lowers decode from the former, runtime uses the latter."""
+    from repro import models
+    cfg = get_smoke_config(arch)
+    shapes, axes = cache_spec(cfg, batch=2, max_len=16)
+    concrete = models.init_cache(cfg, 2, 16)
+    flat_s = jax.tree.leaves(shapes)
+    flat_c = jax.tree.leaves(concrete)
+    assert len(flat_s) == len(flat_c)
+    for s, c in zip(flat_s, flat_c):
+        assert tuple(s.shape) == tuple(c.shape)
+        assert s.dtype == c.dtype
+
+
+def test_model_flops_kinds():
+    cfg = get_config("qwen3-4b")
+    tr = counting.model_flops(cfg, SHAPES["train_4k"])
+    pf = counting.model_flops(cfg, SHAPES["prefill_32k"])
+    dc = counting.model_flops(cfg, SHAPES["decode_32k"])
+    n = cfg.active_param_count()
+    assert tr == 6.0 * n * 4096 * 256
+    assert pf == 2.0 * n * 32768 * 32
+    assert dc == 2.0 * n * 128
+
+
+def test_moe_active_params_smaller():
+    cfg = get_config("grok-1-314b")
+    assert cfg.active_param_count() < 0.4 * cfg.param_count()
+    dense = get_config("qwen3-4b")
+    assert dense.active_param_count() == dense.param_count()
+
+
+def test_decode_specs_batch():
+    cfg = get_config("mistral-nemo-12b")
+    shapes, axes, tok = S.decode_specs(cfg, SHAPES["decode_32k"])
+    assert tok.shape == (128,)
+    # KV cache spans the full context
+    k = shapes["blocks"]["b0"]["k"]
+    assert k.shape[2] == 32768  # [layers, B, S, KH, hd]
