@@ -1,32 +1,41 @@
-"""Quickstart: the paper in ~40 lines.
+"""Quickstart: the paper in ~50 lines.
 
 Generates the paper's three R-MAT graph families, colors each with the
 serial oracle (Alg. 1), the speculative ITERATIVE algorithm (Alg. 2) and the
 dataflow fixpoint (Alg. 3-5, TPU adaptation), and validates the results.
 
-    PYTHONPATH=src python examples/quickstart.py [--scale 12]
+The first-fit inner loop is pluggable (``--engine sort|bitmap|ell_pallas``,
+see repro.core.engine); the ELL kernel path just needs the graph built in
+the ELL layout — no hand-wired kernel closures.
+
+    PYTHONPATH=src python examples/quickstart.py [--scale 12] [--engine bitmap]
 """
 import argparse
 
 import numpy as np
 
 from repro.core import (rmat, greedy_color, color_iterative, color_dataflow,
-                        validate_coloring, num_colors)
+                        validate_coloring, num_colors, available_backends,
+                        get_backend)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=12)
     ap.add_argument("--concurrency", type=int, default=128)
+    ap.add_argument("--engine", default="sort", choices=available_backends(),
+                    help="first-fit mex backend for ITERATIVE/DATAFLOW")
     args = ap.parse_args()
 
+    layout = ("edges", "ell") if get_backend(args.engine).needs_ell else "edges"
     for name in ["RMAT-ER", "RMAT-G", "RMAT-B"]:
         g = rmat.paper_graph(name, scale=args.scale, seed=0)
-        dg = g.to_device()
+        dg = g.to_device(layout=layout)
 
         serial = greedy_color(g)
-        it = color_iterative(dg, concurrency=args.concurrency)
-        df = color_dataflow(dg)
+        it = color_iterative(dg, concurrency=args.concurrency,
+                             engine=args.engine)
+        df = color_dataflow(dg, engine=args.engine)
 
         assert validate_coloring(g, serial)
         assert validate_coloring(g, np.asarray(it.colors))
@@ -35,7 +44,7 @@ def main():
 
         s = g.stats()
         print(f"{name}: |V|={s['num_vertices']} |E|={s['num_edges']} "
-              f"maxdeg={s['max_degree']}")
+              f"maxdeg={s['max_degree']} engine={args.engine}")
         print(f"  serial greedy : {num_colors(serial):3d} colors")
         print(f"  ITERATIVE(P={args.concurrency}): {it.num_colors:3d} colors, "
               f"{it.rounds} rounds, {it.total_conflicts} conflicts")

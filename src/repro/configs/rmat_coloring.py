@@ -20,6 +20,15 @@ class ColoringConfig:
     params: tuple = (0.55, 0.15, 0.15, 0.15)   # RMAT-B, the hostile one
     max_rounds: int = 64
     local_concurrency: int = 1
+    # first-fit mex backend for the local solve: a name registered with
+    # repro.core.engine. The dry-run lowers "sort" and "bitmap";
+    # "ell_pallas" needs a real host graph (for the ELL width) and is only
+    # reachable through color_distributed.
+    engine: str = "sort"
+    # static color-capacity bound for the bitmap backend at dry-run time
+    # (no host graph to read max_degree from; greedy on the paper's graphs
+    # stays <= 143 colors, so 512 leaves ample headroom)
+    color_bound: int = 512
 
 
 def get_config() -> ColoringConfig:

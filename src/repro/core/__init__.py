@@ -1,17 +1,23 @@
 """repro.core — the paper's contribution: parallel greedy distance-1 coloring.
 
 Public API:
-  Graph / DeviceGraph            containers (CSR + fixed-shape edge lists)
+  Graph / DeviceGraph            containers (host CSR + layout-aware device
+                                 arrays: edge list / CSR / ELL)
   rmat.generate / paper_graph    R-MAT test-graph generation (paper §4)
   greedy_color                   serial oracle (Alg. 1)
   color_iterative                speculation+iteration (Alg. 2), JAX
   color_dataflow                 dataflow fixpoint (Alg. 3-5 on TPU), JAX
   dataflow_levels                DAG depth / wavefront profile
   color_distributed              shard_map BSP coloring (Bozdag-style)
+  engine                         pluggable first-fit backends: MexBackend,
+                                 register_backend, fixpoint_sweep;
+                                 engine="sort" | "bitmap" | "ell_pallas"
   comm_schedule                  coloring -> conflict-free collective rounds
 """
 from .graph import Graph, DeviceGraph
-from . import rmat, ordering
+from . import rmat, ordering, engine
+from .engine import (MexBackend, available_backends, get_backend,
+                     register_backend)
 from .greedy_ref import greedy_color
 from .iterative import color_iterative, ColoringResult
 from .dataflow import color_dataflow, dataflow_levels, DataflowResult
@@ -20,7 +26,8 @@ from .distributed import color_distributed
 from .comm_schedule import schedule_transfers, CommSchedule
 
 __all__ = [
-    "Graph", "DeviceGraph", "rmat", "ordering", "greedy_color",
+    "Graph", "DeviceGraph", "rmat", "ordering", "engine", "greedy_color",
+    "MexBackend", "available_backends", "get_backend", "register_backend",
     "color_iterative", "ColoringResult", "color_dataflow", "dataflow_levels",
     "DataflowResult", "validate_coloring", "count_conflicts", "num_colors",
     "color_distributed", "schedule_transfers", "CommSchedule",

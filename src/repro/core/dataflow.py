@@ -16,6 +16,11 @@ coloring in index order — the same invariant the XMT algorithm guarantees
 structural: levels are computed by iteration, not discovered by blocking, so
 DATAFLOWRECURSIVE's ``int_fetch_add`` recursion is unnecessary.
 
+DATAFLOW is ITERATIVE's phase 1 in the fully-concurrent limit with
+index-precedence (offset = vertex id): the sweep itself is the shared
+:func:`repro.core.engine.fixpoint_sweep`, and the first-fit inner loop is
+pluggable via ``engine=`` exactly as in iterative.py.
+
 :func:`dataflow_levels` exposes the DAG depth / wavefront profile — the
 "available parallelism" the XMT's 16K threads would have exploited.
 """
@@ -26,10 +31,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
+from .engine import (EngineSpec, SweepSpec, fixpoint_iterate, fixpoint_sweep,
+                     get_backend)
 from .graph import DeviceGraph
-from .mex import segment_mex
 
 
 @dataclasses.dataclass
@@ -42,41 +47,36 @@ class DataflowResult:
         return int(self.colors.max())
 
 
-@functools.partial(jax.jit, static_argnames=("num_vertices", "max_sweeps"))
-def _dataflow_impl(src, dst, *, num_vertices: int, max_sweeps: int):
-    V = num_vertices
-    syn_v = jnp.arange(V, dtype=jnp.int32)
-    syn_c = jnp.zeros((V,), jnp.int32)
+@functools.partial(jax.jit,
+                   static_argnames=("max_sweeps", "backend", "color_bound"))
+def _dataflow_impl(g: DeviceGraph, *, max_sweeps: int, backend,
+                   color_bound: int = 0):
+    V = g.num_vertices
+    max_colors = g.max_degree + 1
+    if color_bound > 0:
+        max_colors = min(max_colors, color_bound)
+    mex = backend.bind(num_vertices=V, max_colors=max_colors,
+                       ell_slot=g.ell_slot, ell_width=g.ell_width,
+                       max_degree=g.max_degree)
     # dependency edges: only smaller-index neighbors forbid a color
-    dep = dst < src  # padding (src == dst == V) excluded
-
-    def sweep(state):
-        colors, changed, n = state
-        cpad = jnp.concatenate([colors, jnp.zeros((1,), jnp.int32)])
-        key_v = jnp.where(dep, src, V)
-        key_c = jnp.where(dep, cpad[dst], 0)
-        mex = segment_mex(
-            jnp.concatenate([key_v, syn_v]),
-            jnp.concatenate([key_c, syn_c]),
-            V,
-        )
-        return mex, jnp.any(mex != colors), n + 1
-
-    def cond(state):
-        _, changed, n = state
-        return jnp.logical_and(changed, n < max_sweeps)
-
-    colors, changed, n = lax.while_loop(
-        cond, sweep,
-        (jnp.zeros((V,), jnp.int32), jnp.asarray(True), jnp.asarray(0, jnp.int32)),
-    )
+    dep = g.dst < g.src  # padding (src == dst == V) excluded
+    spec = SweepSpec(key_v=jnp.where(dep, g.src, V),
+                     dyn_idx=g.dst, dyn=dep,
+                     static_c=jnp.zeros_like(g.dst))
+    colors, n, changed = fixpoint_sweep(
+        mex, spec, jnp.zeros((V,), jnp.int32), jnp.ones((V,), jnp.bool_),
+        max_sweeps=max_sweeps)
     return colors, n, changed
 
 
-def color_dataflow(g: DeviceGraph, max_sweeps: int = 4096) -> DataflowResult:
+def color_dataflow(g: DeviceGraph, max_sweeps: int = 4096,
+                   engine: EngineSpec = "sort",
+                   color_bound: int = 0) -> DataflowResult:
+    """``color_bound`` caps the table backends' capacity below Delta+1 —
+    a caller-asserted bound, as in :func:`color_iterative`."""
     colors, sweeps, pending = _dataflow_impl(
-        g.src, g.dst, num_vertices=g.num_vertices, max_sweeps=max_sweeps
-    )
+        g, max_sweeps=max_sweeps, backend=get_backend(engine),
+        color_bound=int(color_bound))
     if bool(pending):
         raise RuntimeError(f"DATAFLOW did not converge in {max_sweeps} sweeps")
     return DataflowResult(colors=colors, sweeps=int(sweeps))
@@ -87,25 +87,17 @@ def _levels_impl(src, dst, *, num_vertices: int, max_iters: int):
     V = num_vertices
     dep = dst < src
 
-    def body(state):
-        lv, changed, n = state
+    def step(lv):
         lpad = jnp.concatenate([lv, jnp.zeros((1,), jnp.int32)])
         contrib = jnp.where(dep, lpad[dst], 0)
         seg = (
             jnp.zeros((V,), jnp.int32)
             .at[src].max(contrib, mode="drop")
         )
-        new = seg + 1
-        return new, jnp.any(new != lv), n + 1
+        return seg + 1
 
-    def cond(state):
-        _, changed, n = state
-        return jnp.logical_and(changed, n < max_iters)
-
-    lv, _, n = lax.while_loop(
-        cond, body,
-        (jnp.ones((V,), jnp.int32), jnp.asarray(True), jnp.asarray(0, jnp.int32)),
-    )
+    lv, n, _ = fixpoint_iterate(step, jnp.ones((V,), jnp.int32),
+                                max_iters=max_iters)
     return lv, n
 
 

@@ -9,8 +9,11 @@ Vertices are block-partitioned across all mesh devices. Each BSP round:
      concurrency ``C=1`` (default) each device colors its pending set
      *sequentially* — exactly the distributed-memory algorithm — realized as
      the chaotic fixpoint of the local offset-precedence dataflow equations
-     (converges in local-DAG-depth sweeps, no communication inside);
-     cross-device pending neighbors are speculated against (not forbidden);
+     via the shared :func:`repro.core.engine.fixpoint_sweep` (converges in
+     local-DAG-depth sweeps, no communication inside); cross-device pending
+     neighbors are speculated against (not forbidden). The first-fit inner
+     loop is the pluggable mex backend (``engine=``), bound to the local
+     vertex slab;
   3. ``all_gather`` of committed colors + pending flags;
   4. conflict detection: monochromatic same-round pairs — with C=1 these are
      exclusively *boundary* (cross-device) conflicts, as in [6]; the higher
@@ -33,8 +36,11 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..jax_compat import pvary, set_mesh, shard_map
+
+from .engine import (EngineSpec, SweepSpec, edge_slots, fixpoint_sweep,
+                     get_backend, lockstep_offsets)
 from .graph import Graph
-from .mex import segment_mex
 
 
 def partition_graph(graph: Graph, num_devices: int):
@@ -42,7 +48,9 @@ def partition_graph(graph: Graph, num_devices: int):
 
     Returns (lsrc [D, El], ldst [D, El], verts_per_device). Device d owns
     global vertices [d*Vl, (d+1)*Vl); lsrc holds *local* ids (pad = Vl),
-    ldst holds *global* ids (pad = Vl*D).
+    ldst holds *global* ids (pad = Vl*D). Edges stay row-contiguous per
+    device (global src order), so local ELL slots are recoverable on device
+    via :func:`repro.core.engine.edge_slots`.
     """
     D = num_devices
     V = graph.num_vertices
@@ -66,7 +74,7 @@ def partition_graph(graph: Graph, num_devices: int):
 
 def _bsp_local(lsrc, ldst, *, axis_names: Tuple[str, ...], verts_local: int,
                num_devices: int, local_concurrency: int, max_rounds: int,
-               max_sweeps: int):
+               max_sweeps: int, backend, max_colors: int, ell_width: int):
     """Per-device body (runs under shard_map).
 
     Wire format (§Perf H-C1): ONE int16 all_gather per round carrying
@@ -75,6 +83,10 @@ def _bsp_local(lsrc, ldst, *, axis_names: Tuple[str, ...], verts_local: int,
     from it, replacing the two int32 + one bool gathers of the naive BSP
     round (measured 4.4x collective-byte reduction). Colors must stay below
     2^14 (greedy uses <= Delta+1; the paper's graphs use <= 143).
+
+    The conflict pass stays fused with the wire decode rather than routing
+    through engine.speculation_conflicts — the per-machine specialization
+    this driver exists for.
     """
     Vl = verts_local
     Vp = Vl * num_devices
@@ -86,9 +98,13 @@ def _bsp_local(lsrc, ldst, *, axis_names: Tuple[str, ...], verts_local: int,
     gsrc = jnp.where(lsrc < Vl, lsrc + base, Vp)
     dst_local = (ldst >= base) & (ldst < base + Vl)
     dst_loc = jnp.where(dst_local, ldst - base, Vl)  # local id or pad
-    syn_v = jnp.arange(Vl, dtype=jnp.int32)
-    syn_c = jnp.zeros((Vl,), jnp.int32)
     lsrc_safe = jnp.minimum(lsrc, Vl)
+    slots = edge_slots(lsrc, Vl) if backend.needs_ell else None
+    # ell_width IS the true max degree here (color_distributed wires it so);
+    # pass it as max_degree too, so a color_bound cap can't mask truncation
+    mex = backend.bind(num_vertices=Vl, max_colors=max_colors,
+                       ell_slot=slots, ell_width=ell_width,
+                       max_degree=ell_width if backend.needs_ell else -1)
 
     def gather(x):
         return lax.all_gather(x, axis_names, tiled=True)
@@ -96,7 +112,7 @@ def _bsp_local(lsrc, ldst, *, axis_names: Tuple[str, ...], verts_local: int,
     def pv(x):
         # mark as device-varying so while_loop carries type-check under
         # shard_map's varying-manual-axes tracking
-        return lax.pvary(x, axis_names)
+        return pvary(x, axis_names)
 
     def round_body(state):
         colors, pending, packed_glob, rnd, conf_hist, _ = state
@@ -110,37 +126,22 @@ def _bsp_local(lsrc, ldst, *, axis_names: Tuple[str, ...], verts_local: int,
         ppad = jnp.concatenate([pending, jnp.zeros((1,), jnp.bool_)])
 
         # local lockstep offsets (C virtual threads per device)
-        r = pending.sum(dtype=jnp.int32)
-        bs = lax.div(r + C - 1, C)
-        rank = jnp.cumsum(pending.astype(jnp.int32)) - 1
-        offset = jnp.where(pending, rank % jnp.maximum(bs, 1), 0).astype(jnp.int32)
+        offset = lockstep_offsets(pending, C)
         opad = jnp.concatenate([offset, jnp.full((1,), jnp.iinfo(jnp.int32).max, jnp.int32)])
 
         src_pending = ppad[lsrc_safe] & (lsrc < Vl)
         nbr_local_pending = ppad[dst_loc]  # local *and* pending
         precede = nbr_local_pending & (opad[dst_loc] < opad[lsrc_safe])
-        key_v = jnp.where(src_pending, lsrc, Vl)
 
-        # (2) local sequential greedy as an offset-DAG fixpoint (no comms)
-        def sweep(s):
-            cwork, _, n = s
-            cpad_loc = jnp.concatenate([cwork, jnp.zeros((1,), jnp.int32)])
-            contrib = jnp.where(precede, cpad_loc[dst_loc], snap_pad[ldst])
-            key_c = jnp.where(src_pending, contrib, 0)
-            mex = segment_mex(
-                jnp.concatenate([key_v, syn_v]),
-                jnp.concatenate([key_c, syn_c]), Vl)
-            c_new = jnp.where(pending, mex, cwork)
-            return c_new, jnp.any(c_new != cwork), n + 1
-
-        def sweep_cond(s):
-            _, changed, n = s
-            return jnp.logical_and(changed, n < max_sweeps)
-
-        c0 = jnp.where(pending, 0, colors)
-        colors, _, _ = lax.while_loop(
-            sweep_cond, sweep,
-            (c0, pv(jnp.asarray(True)), pv(jnp.asarray(0, jnp.int32))))
+        # (2) local sequential greedy as an offset-DAG fixpoint (no comms):
+        # preceding local-pending neighbors track the live local colors,
+        # everyone else contributes the frozen global snapshot.
+        spec = SweepSpec(key_v=jnp.where(src_pending, lsrc, Vl),
+                         dyn_idx=dst_loc, dyn=precede,
+                         static_c=snap_pad[ldst])
+        colors, _, _ = fixpoint_sweep(
+            mex, spec, jnp.where(pending, 0, colors), pending,
+            max_sweeps=max_sweeps, wrap=pv)
 
         # (3) single fused wire: color<<1 | was-pending-this-round (int16)
         packed_local = ((colors << 1) | pending.astype(jnp.int32)).astype(jnp.int16)
@@ -176,21 +177,37 @@ def _bsp_local(lsrc, ldst, *, axis_names: Tuple[str, ...], verts_local: int,
 
 def build_distributed_coloring(mesh: Mesh, verts_local: int, edges_local: int,
                                local_concurrency: int = 1,
-                               max_rounds: int = 64, max_sweeps: int = 16384):
+                               max_rounds: int = 64, max_sweeps: int = 16384,
+                               engine: EngineSpec = "sort",
+                               max_colors: int = 0, ell_width: int = 0):
     """Build the jitted shard_map coloring program for a mesh.
 
     Returns ``fn(lsrc [D, El], ldst [D, El]) -> (colors [D, Vl], rounds,
     conflicts_per_round)``; inputs/outputs sharded over all mesh axes.
     Static shapes, so the identical program serves dry-run lowering.
+
+    ``engine`` picks the local first-fit backend; ``max_colors`` (global
+    Delta+1) sizes the bitmap/ell backends; ``ell_width`` (max degree of any
+    owned vertex) is required for ``engine="ell_pallas"``.
     """
+    backend = get_backend(engine)
+    if backend.needs_ell and ell_width <= 0:
+        raise ValueError("engine='ell_pallas' needs ell_width (the max "
+                         "degree across owned vertices) — color_distributed "
+                         "wires it from the host graph automatically")
+    if backend.needs_color_bound and max_colors <= 0:
+        raise ValueError(
+            f"engine={backend.name!r} needs max_colors (global Delta+1) — "
+            "color_distributed wires it from the host graph automatically")
     axis_names = tuple(mesh.axis_names)
     D = int(np.prod(mesh.devices.shape))
     body = functools.partial(
         _bsp_local, axis_names=axis_names, verts_local=verts_local,
         num_devices=D, local_concurrency=local_concurrency,
-        max_rounds=max_rounds, max_sweeps=max_sweeps)
+        max_rounds=max_rounds, max_sweeps=max_sweeps, backend=backend,
+        max_colors=max_colors, ell_width=ell_width)
     spec_in = P(axis_names, None)
-    smapped = jax.shard_map(
+    smapped = shard_map(
         body, mesh=mesh,
         in_specs=(spec_in, spec_in),
         out_specs=(P(axis_names, None), P(axis_names), P(axis_names, None)),
@@ -204,13 +221,28 @@ def build_distributed_coloring(mesh: Mesh, verts_local: int, edges_local: int,
 
 
 def color_distributed(graph: Graph, mesh: Mesh, local_concurrency: int = 1,
-                      max_rounds: int = 64):
-    """End-to-end: partition on host, color on the mesh, return colors [V]."""
+                      max_rounds: int = 64, engine: EngineSpec = "sort",
+                      color_bound: int = 0):
+    """End-to-end: partition on host, color on the mesh, return colors [V].
+
+    ``color_bound`` optionally caps the table-backend color capacity below
+    the provable Delta+1 bound (greedy on the paper's graphs uses <= 143
+    colors while Delta reaches 10^4+ on skewed R-MAT, so the provable bound
+    wastes Theta(V*Delta) table memory per sweep). It is a caller-asserted
+    bound: colors at or above it lose their forbids silently, so only cap
+    when the chromatic behavior of the graph family is known. This is also
+    what makes the dry-run's ``ColoringConfig.color_bound`` program
+    reproducible here at runtime."""
     D = int(np.prod(mesh.devices.shape))
     lsrc, ldst, Vl = partition_graph(graph, D)
+    max_colors = graph.max_degree() + 1
+    if color_bound > 0:
+        max_colors = min(max_colors, int(color_bound))
     fn = build_distributed_coloring(mesh, Vl, lsrc.shape[1],
-                                    local_concurrency, max_rounds)
-    with jax.set_mesh(mesh):
+                                    local_concurrency, max_rounds,
+                                    engine=engine, max_colors=max_colors,
+                                    ell_width=graph.max_degree())
+    with set_mesh(mesh):
         colors, rounds, conf = fn(jnp.asarray(lsrc), jnp.asarray(ldst))
     colors = np.asarray(colors).reshape(-1)[: graph.num_vertices]
     return colors, int(rounds), np.asarray(conf)

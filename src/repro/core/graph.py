@@ -5,7 +5,13 @@ Two representations:
 * :class:`Graph` — host-side (numpy) CSR + directed edge list. Construction,
   dedup, symmetrization, stats live here.
 * :class:`DeviceGraph` — fixed-shape jnp arrays consumed by the JAX coloring
-  algorithms (directed edge list, optionally padded ELL for the Pallas path).
+  algorithms. Layout-aware: always carries the directed edge list, and via
+  ``Graph.to_device(layout=...)`` optionally the CSR arrays
+  (``row_ptr``/``col_idx`` on device) and/or the ELL geometry (per-edge
+  slot map + static width) the Pallas first-fit path scatters through — so
+  mex backends pick their layout from the graph instead of callers
+  hand-threading ``to_ell()`` output around. Registered as a jax pytree:
+  the coloring drivers take it as a traced argument directly.
 
 Conventions
 -----------
@@ -17,11 +23,14 @@ Conventions
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
+
+_LAYOUTS = ("edges", "csr", "ell")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,27 +46,35 @@ class Graph:
     def from_edges(num_vertices: int, edges: np.ndarray) -> "Graph":
         """Build from an [M, 2] array of (possibly duplicated, possibly
         self-looped, possibly one-directional) edges — mirrors the paper's
-        post-processing of R-MAT output (dup/self-loop removal)."""
-        edges = np.asarray(edges, dtype=np.int64)
+        post-processing of R-MAT output (dup/self-loop removal).
+
+        Dedup is a two-key ``np.lexsort`` over int32 endpoint arrays (not a
+        dense ``src * V + dst`` linear index): no int64 key materialization,
+        which cuts peak host memory on the scale >= 24 R-MAT graphs."""
+        edges = np.asarray(edges)
         if edges.size == 0:
             return Graph(num_vertices,
                          np.zeros(num_vertices + 1, np.int64),
                          np.zeros(0, np.int32))
-        u, v = edges[:, 0], edges[:, 1]
+        u = edges[:, 0].astype(np.int32)
+        v = edges[:, 1].astype(np.int32)
         keep = u != v  # drop self loops
         u, v = u[keep], v[keep]
-        # symmetrize, dedup via linear index
+        # symmetrize, dedup via lexicographic sort on (src, dst)
         src = np.concatenate([u, v])
         dst = np.concatenate([v, u])
-        lin = src * num_vertices + dst
-        lin = np.unique(lin)
-        src = (lin // num_vertices).astype(np.int32)
-        dst = (lin % num_vertices).astype(np.int32)
-        # lin is sorted => src sorted, dst sorted within src
+        order = np.lexsort((dst, src))
+        src, dst = src[order], dst[order]
+        if src.size:
+            first = np.empty(src.shape, np.bool_)
+            first[0] = True
+            np.logical_or(src[1:] != src[:-1], dst[1:] != dst[:-1],
+                          out=first[1:])
+            src, dst = src[first], dst[first]
         counts = np.bincount(src, minlength=num_vertices).astype(np.int64)
         row_ptr = np.zeros(num_vertices + 1, np.int64)
         np.cumsum(counts, out=row_ptr[1:])
-        return Graph(num_vertices, row_ptr, dst)
+        return Graph(num_vertices, row_ptr, dst.astype(np.int32))
 
     # ---------------------------------------------------------------- stats
     @property
@@ -113,12 +130,55 @@ class Graph:
             self.num_vertices, np.stack([new_src[half], new_dst[half]], 1)
         )
 
-    def to_device(self, *, pad_edges_to: Optional[int] = None) -> "DeviceGraph":
+    def to_device(self, *, layout: Union[str, Sequence[str]] = "edges",
+                  pad_edges_to: Optional[int] = None,
+                  ell_width: Optional[int] = None) -> "DeviceGraph":
+        """Move the graph on device in the requested layout(s).
+
+        layout: ``"edges"`` (directed edge list — always present),
+            ``"csr"`` (adds ``row_ptr``/``col_idx`` device arrays), ``"ell"``
+            (adds the ELL geometry — the per-edge slot map + static slab
+            width — that the ``ell_pallas`` mex backend scatters through;
+            the dense neighbor slab itself stays host-side via
+            :meth:`to_ell`, since the engine rebuilds color slabs per sweep
+            and never reads neighbor ids from device), or any sequence of
+            these. Backends pick what they need from the result.
+        ell_width: optional ELL width override (default: max degree; a
+            smaller width truncates rows and is only safe for callers that
+            do not need exact neighborhoods).
+        """
+        layouts = (layout,) if isinstance(layout, str) else tuple(layout)
+        unknown = set(layouts) - set(_LAYOUTS)
+        if unknown:
+            raise ValueError(f"unknown layout(s) {sorted(unknown)}; "
+                             f"choose from {_LAYOUTS}")
         src, dst = self.directed_edges()
         e = src.shape[0]
         pad = (pad_edges_to or e) - e
         if pad < 0:
             raise ValueError(f"pad_edges_to={pad_edges_to} < num edges {e}")
+
+        row_ptr_dev = col_idx_dev = slot_dev = None
+        width = 0
+        if "csr" in layouts:
+            # device row_ptr is int32 (int64 would silently downcast under
+            # default jax anyway); guard the 2E < 2^31 assumption explicitly
+            if self.num_directed_edges > np.iinfo(np.int32).max:
+                raise ValueError("csr device layout needs 2E < 2^31; "
+                                 f"got {self.num_directed_edges} edges")
+            row_ptr_dev = jnp.asarray(self.row_ptr.astype(np.int32))
+            col_idx_dev = jnp.asarray(self.col_idx)
+        if "ell" in layouts:
+            width = max(1, int(ell_width if ell_width is not None
+                               else self.max_degree()))
+            # slot of each edge within its row; out-of-width and padding
+            # edges get ``width`` so ELL scatters drop them (mode="drop")
+            pos = np.arange(e, dtype=np.int64) - self.row_ptr[src]
+            slot = np.minimum(pos, width).astype(np.int32)
+            if pad:
+                slot = np.concatenate([slot, np.full(pad, width, np.int32)])
+            slot_dev = jnp.asarray(slot)
+
         if pad:
             # padding edges point at a phantom vertex V with src=V so they are
             # inert in segment reductions over [0, V)
@@ -129,6 +189,11 @@ class Graph:
             num_directed_edges=e,
             src=jnp.asarray(src),
             dst=jnp.asarray(dst),
+            max_degree=self.max_degree(),
+            row_ptr=row_ptr_dev,
+            col_idx=col_idx_dev,
+            ell_slot=slot_dev,
+            ell_width=width,
         )
 
     def to_ell(self, max_degree: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray]:
@@ -150,13 +215,54 @@ class Graph:
 
 @dataclasses.dataclass(frozen=True)
 class DeviceGraph:
-    """Fixed-shape directed edge list on device."""
+    """Fixed-shape device arrays in one or more layouts (a jax pytree).
+
+    The directed edge list (``src``/``dst``) is always present; CSR and ELL
+    layouts are optional and requested via ``Graph.to_device(layout=...)``.
+    ``max_degree`` rides along as static metadata — it is the color bound
+    the ``bitmap`` and ``ell_pallas`` mex backends size themselves from;
+    ``-1`` means unknown (hand-built graphs), which those backends reject
+    rather than silently under-sizing their tables.
+    """
 
     num_vertices: int
     num_directed_edges: int
     src: jnp.ndarray  # [E2p] int32 in [0, V]; V = padding
     dst: jnp.ndarray  # [E2p] int32 in [0, V]
+    max_degree: int = -1
+    row_ptr: Optional[jnp.ndarray] = None   # [V+1] int32 (layout="csr")
+    col_idx: Optional[jnp.ndarray] = None   # [2E]  int32 (layout="csr")
+    ell_slot: Optional[jnp.ndarray] = None  # [E2p] int32 (layout="ell")
+    ell_width: int = 0                      # static slab width (layout="ell")
 
     @property
     def padded_edges(self) -> int:
         return int(self.src.shape[0])
+
+    @property
+    def has_csr(self) -> bool:
+        return self.row_ptr is not None
+
+    @property
+    def has_ell(self) -> bool:
+        return self.ell_slot is not None
+
+
+def _devicegraph_flatten(g: DeviceGraph):
+    children = (g.src, g.dst, g.row_ptr, g.col_idx, g.ell_slot)
+    aux = (g.num_vertices, g.num_directed_edges, g.max_degree, g.ell_width)
+    return children, aux
+
+
+def _devicegraph_unflatten(aux, children):
+    src, dst, row_ptr, col_idx, ell_slot = children
+    num_vertices, num_directed_edges, max_degree, ell_width = aux
+    return DeviceGraph(num_vertices=num_vertices,
+                       num_directed_edges=num_directed_edges,
+                       src=src, dst=dst, max_degree=max_degree,
+                       row_ptr=row_ptr, col_idx=col_idx,
+                       ell_slot=ell_slot, ell_width=ell_width)
+
+
+jax.tree_util.register_pytree_node(
+    DeviceGraph, _devicegraph_flatten, _devicegraph_unflatten)

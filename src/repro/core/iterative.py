@@ -13,15 +13,17 @@ can only arise between same-offset vertices.
 We reproduce those semantics exactly on a SIMD machine. Per round:
 
   1. pending vertices get ``offset = rank % ceil(|U|/P)`` (rank = position in
-     the pending set, matching OpenMP-static block assignment);
+     the pending set, matching OpenMP-static block assignment) —
+     :func:`repro.core.engine.lockstep_offsets`;
   2. tentative colors are the fixpoint of the *dataflow equations over the
      offset-precedence DAG* —
-         c[v] = mex{ c[w] : w adj v, committed(w) or offset(w) < offset(v) } —
-     reached by chaotic sweeps (depth(DAG) of them), which is the SIMD
-     equivalent of the threads advancing through their blocks in lockstep;
+         c[v] = mex{ c[w] : w adj v, committed(w) or offset(w) < offset(v) }
+     reached by chaotic sweeps (depth(DAG) of them) via the shared
+     :func:`repro.core.engine.fixpoint_sweep` — the SIMD equivalent of the
+     threads advancing through their blocks in lockstep;
   3. conflict detection (Alg. 2 lines 11-14): monochromatic pending pairs
      (necessarily same-offset) queue the higher-index endpoint for the next
-     round.
+     round (:func:`repro.core.engine.speculation_conflicts`).
 
 Limits: ``concurrency=1`` degenerates to serial greedy (0 conflicts,
 colors == Alg. 1); ``concurrency >= |V|`` is the fully-concurrent limit (the
@@ -30,9 +32,10 @@ Fig. 10(a) trend — and the pending set strictly shrinks every round (the
 minimum-index vertex of each conflict cluster always survives), so the loop
 terminates.
 
-The first-fit engine is the segmented sort-based mex (O(E log E) per sweep,
-TPU-friendly); the Pallas ``firstfit`` kernel offers the bitmask variant for
-the ELL path (see kernels/).
+The first-fit inner loop is pluggable (``engine=``): ``"sort"`` (segmented
+sort mex), ``"bitmap"`` (O(E) scatter-or forbidden bitmap) or
+``"ell_pallas"`` (the Pallas kernel over the graph's ELL layout) — see
+engine.py for the registry.
 """
 from __future__ import annotations
 
@@ -43,8 +46,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from .engine import (EngineSpec, SweepSpec, fixpoint_sweep, get_backend,
+                     lockstep_offsets, speculation_conflicts)
 from .graph import DeviceGraph
-from .mex import segment_mex
 
 
 @dataclasses.dataclass
@@ -52,11 +56,16 @@ class ColoringResult:
     colors: jnp.ndarray               # [V] int32, >= 1
     rounds: int                       # outer iterations (paper Fig. 10b)
     conflicts_per_round: jnp.ndarray  # [max_rounds] int32 (paper Fig. 10c)
-    sweeps: int                       # total inner dataflow sweeps
+    sweeps_per_round: jnp.ndarray     # [max_rounds] int32 inner sweeps
 
     @property
     def total_conflicts(self) -> int:
         return int(self.conflicts_per_round.sum())
+
+    @property
+    def sweeps(self) -> int:
+        """Total inner dataflow sweeps across all rounds."""
+        return int(self.sweeps_per_round.sum())
 
     @property
     def num_colors(self) -> int:
@@ -65,65 +74,43 @@ class ColoringResult:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("num_vertices", "concurrency", "max_rounds", "max_sweeps",
-                     "mex_fn"),
+    static_argnames=("concurrency", "max_rounds", "max_sweeps", "backend",
+                     "color_bound"),
 )
-def _iterative_impl(src, dst, *, num_vertices: int, concurrency: int,
-                    max_rounds: int, max_sweeps: int, mex_fn=None):
-    V = num_vertices
-    P = concurrency
-    syn_v = jnp.arange(V, dtype=jnp.int32)
-    syn_c = jnp.zeros((V,), jnp.int32)
-
-    def phase1(colors, pending, offset):
-        """Fixpoint of the offset-precedence dataflow equations."""
-        ppad = jnp.concatenate([pending, jnp.zeros((1,), jnp.bool_)])
-        opad = jnp.concatenate([offset, jnp.full((1,), jnp.iinfo(jnp.int32).max, jnp.int32)])
-        src_pending = ppad[src]
-        # neighbor forbids src iff committed, or pending at smaller offset
-        forbids = src_pending & (~ppad[dst] | (opad[dst] < opad[src]))
-        key_v_base = jnp.where(forbids, src, V)
-
-        def sweep(state):
-            c, _, n = state
-            if mex_fn is not None:
-                mex = mex_fn(c, pending, offset)
-            else:
-                cpad = jnp.concatenate([c, jnp.zeros((1,), jnp.int32)])
-                key_c = jnp.where(forbids, cpad[dst], 0)
-                mex = segment_mex(
-                    jnp.concatenate([key_v_base, syn_v]),
-                    jnp.concatenate([key_c, syn_c]), V)
-            c_new = jnp.where(pending, mex, c)
-            return c_new, jnp.any(c_new != c), n + 1
-
-        def cond(state):
-            _, changed, n = state
-            return jnp.logical_and(changed, n < max_sweeps)
-
-        c0 = jnp.where(pending, 0, colors)
-        c, _, n = lax.while_loop(cond, sweep, (c0, jnp.asarray(True), jnp.asarray(0, jnp.int32)))
-        return c, n
+def _iterative_impl(g: DeviceGraph, *, concurrency: int, max_rounds: int,
+                    max_sweeps: int, backend, color_bound: int = 0):
+    V = g.num_vertices
+    src, dst = g.src, g.dst
+    max_colors = g.max_degree + 1
+    if color_bound > 0:
+        max_colors = min(max_colors, color_bound)
+    mex = backend.bind(num_vertices=V, max_colors=max_colors,
+                       ell_slot=g.ell_slot, ell_width=g.ell_width,
+                       max_degree=g.max_degree)
 
     def round_body(state):
-        colors, pending, rnd, conf_hist, sweeps = state
+        colors, pending, rnd, conf_hist, sweep_hist = state
         # OpenMP-static lockstep offsets over the pending set
-        r = pending.sum(dtype=jnp.int32)
-        bs = lax.div(r + P - 1, P)  # block size = supersteps this round
-        rank = jnp.cumsum(pending.astype(jnp.int32)) - 1
-        offset = jnp.where(pending, rank % jnp.maximum(bs, 1), 0).astype(jnp.int32)
+        offset = lockstep_offsets(pending, concurrency)
+        ppad = jnp.concatenate([pending, jnp.zeros((1,), jnp.bool_)])
+        opad = jnp.concatenate(
+            [offset, jnp.full((1,), jnp.iinfo(jnp.int32).max, jnp.int32)])
+        # neighbor forbids src iff committed, or pending at smaller offset
+        forbids = ppad[src] & (~ppad[dst] | (opad[dst] < opad[src]))
+        spec = SweepSpec(key_v=jnp.where(forbids, src, V),
+                         dyn_idx=dst, dyn=forbids,
+                         static_c=jnp.zeros_like(dst))
 
-        colors, n_sweeps = phase1(colors, pending, offset)
+        # Phase 1 — fixpoint of the offset-precedence dataflow equations.
+        colors, n_sweeps, _ = fixpoint_sweep(
+            mex, spec, jnp.where(pending, 0, colors), pending,
+            max_sweeps=max_sweeps)
 
         # Phase 2 — conflicts among same-round pairs; higher index recolors.
-        cpad = jnp.concatenate([colors, jnp.zeros((1,), jnp.int32)])
-        ppad = jnp.concatenate([pending, jnp.zeros((1,), jnp.bool_)])
-        conf_e = ppad[src] & ppad[dst] & (cpad[src] == cpad[dst]) & (src > dst)
-        new_pending = (jnp.zeros((V,), jnp.int32)
-                       .at[src].max(conf_e.astype(jnp.int32), mode="drop")
-                       .astype(jnp.bool_))
+        new_pending = speculation_conflicts(src, dst, colors, pending, V)
         conf_hist = conf_hist.at[rnd].set(new_pending.sum(dtype=jnp.int32))
-        return colors, new_pending, rnd + 1, conf_hist, sweeps + n_sweeps
+        sweep_hist = sweep_hist.at[rnd].set(n_sweeps)
+        return colors, new_pending, rnd + 1, conf_hist, sweep_hist
 
     def cond(state):
         _, pending, rnd, _, _ = state
@@ -134,10 +121,11 @@ def _iterative_impl(src, dst, *, num_vertices: int, concurrency: int,
         jnp.ones((V,), jnp.bool_),
         jnp.asarray(0, jnp.int32),
         jnp.zeros((max_rounds,), jnp.int32),
-        jnp.asarray(0, jnp.int32),
+        jnp.zeros((max_rounds,), jnp.int32),
     )
-    colors, pending, rnd, conf_hist, sweeps = lax.while_loop(cond, round_body, init)
-    return colors, rnd, conf_hist, sweeps, jnp.any(pending)
+    colors, pending, rnd, conf_hist, sweep_hist = lax.while_loop(
+        cond, round_body, init)
+    return colors, rnd, conf_hist, sweep_hist, jnp.any(pending)
 
 
 def color_iterative(
@@ -145,18 +133,24 @@ def color_iterative(
     concurrency: int = 64,
     max_rounds: int = 64,
     max_sweeps: int = 4096,
-    mex_fn=None,
+    engine: EngineSpec = "sort",
+    color_bound: int = 0,
 ) -> ColoringResult:
     """Run ITERATIVE with ``concurrency`` lockstep virtual threads.
 
-    ``mex_fn(colors, pending, offset)`` optionally replaces the sort-based
-    first-fit engine (e.g. the Pallas ELL kernel path from kernels/ops.py)."""
-    colors, rnd, conf_hist, sweeps, left = _iterative_impl(
-        g.src, g.dst, num_vertices=g.num_vertices,
-        concurrency=int(concurrency), max_rounds=max_rounds, max_sweeps=max_sweeps,
-        mex_fn=mex_fn,
+    ``engine`` selects the first-fit inner loop by name (``"sort"``,
+    ``"bitmap"``, ``"ell_pallas"``) or takes a
+    :class:`repro.core.engine.MexBackend` instance directly.
+    ``color_bound`` optionally caps the table backends' color capacity
+    below the provable Delta+1 bound (a caller-asserted bound — colors at
+    or above it lose their forbids silently; see color_distributed)."""
+    colors, rnd, conf_hist, sweep_hist, left = _iterative_impl(
+        g, concurrency=int(concurrency), max_rounds=max_rounds,
+        max_sweeps=max_sweeps, backend=get_backend(engine),
+        color_bound=int(color_bound),
     )
     if bool(left):
         raise RuntimeError(f"ITERATIVE did not converge in {max_rounds} rounds")
     return ColoringResult(colors=colors, rounds=int(rnd),
-                          conflicts_per_round=conf_hist, sweeps=int(sweeps))
+                          conflicts_per_round=conf_hist,
+                          sweeps_per_round=sweep_hist)

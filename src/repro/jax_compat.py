@@ -1,0 +1,44 @@
+"""Shims for jax API drift around 0.4.37 vs current releases.
+
+Three renames bit this repo (the same genus as the Pallas
+``TPUCompilerParams`` shim in kernels/tpu_compat.py):
+
+* ``jax.shard_map``   — lived at ``jax.experimental.shard_map.shard_map``;
+* ``jax.set_mesh``    — absent; the ``Mesh`` object itself is the context
+  manager on 0.4.x;
+* ``jax.lax.pvary``   — absent; 0.4.x shard_map has no varying-manual-axes
+  tracking, so the tag is a no-op there.
+
+Import from here instead of jax directly wherever one of these is needed.
+"""
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, **kw):  # type: ignore[no-redef]
+        # 0.4.x shard_map has no replication rule for while_loop; the new
+        # varying-manual-axes tracking (pvary) replaces check_rep entirely,
+        # so disabling it here loses nothing we rely on.
+        kw.setdefault("check_rep", False)
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)
+
+
+def set_mesh(mesh):
+    """Context manager activating ``mesh`` (jax.set_mesh or Mesh-as-context)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def pvary(x, axis_names):
+    """Tag ``x`` device-varying over ``axis_names`` where jax tracks that."""
+    if hasattr(lax, "pvary"):
+        return lax.pvary(x, axis_names)
+    return x

@@ -2,14 +2,17 @@
 
 firstfit — bitmask first-fit over ELL neighbor-color slabs (Alg. 1 lines 5-6)
 conflict — edge-parallel conflict detection (Alg. 2 line 13)
+
+The kernels plug into the coloring drivers through the mex-backend registry
+(``repro.core.engine``, ``engine="ell_pallas"``) rather than hand-wired
+closures.
 """
 from .firstfit import firstfit
 from .conflict import conflict_mask
 from .ref import firstfit_ref, conflict_mask_ref
-from .ops import ell_mex, ell_gather_colors, make_kernel_mex_fn, count_conflicts_kernel, INTERPRET
+from .ops import ell_mex, ell_gather_colors, count_conflicts_kernel, INTERPRET
 
 __all__ = [
     "firstfit", "conflict_mask", "firstfit_ref", "conflict_mask_ref",
-    "ell_mex", "ell_gather_colors", "make_kernel_mex_fn",
-    "count_conflicts_kernel", "INTERPRET",
+    "ell_mex", "ell_gather_colors", "count_conflicts_kernel", "INTERPRET",
 ]

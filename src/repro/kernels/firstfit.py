@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .tpu_compat import TPUCompilerParams
+
 
 def _firstfit_kernel(nbr_ref, out_ref, forb_ref, *, words: int, bd: int):
     """One (vertex-tile, slot-tile) grid step.
@@ -104,7 +106,7 @@ def firstfit(
         out_specs=pl.BlockSpec((block_v,), lambda i, j: (i,)),
         out_shape=jax.ShapeDtypeStruct((vp,), jnp.int32),
         scratch_shapes=[pltpu.VMEM((block_v, words), jnp.uint32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=TPUCompilerParams(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,

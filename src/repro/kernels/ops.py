@@ -3,6 +3,12 @@
 On this CPU container the kernels run with ``interpret=True`` (Pallas
 executes the kernel body in Python for correctness); on TPU the same calls
 compile to Mosaic. ``INTERPRET`` flips automatically based on the backend.
+
+The speculative drivers no longer thread kernel closures through here: the
+``"ell_pallas"`` entry in :mod:`repro.core.engine` binds the firstfit kernel
+to a graph's ELL layout directly (``engine="ell_pallas"``). What remains are
+the standalone kernel wrappers (serial-style mex over a slab, conflict
+counting) used by benchmarks and tests.
 """
 from __future__ import annotations
 
@@ -35,29 +41,6 @@ def ell_mex(colors: jnp.ndarray, ell: jnp.ndarray, *, words: int = 16,
     nbr = ell_gather_colors(colors, ell)
     return firstfit(nbr, words=words,
                     interpret=INTERPRET if interpret is None else interpret)
-
-
-def make_kernel_mex_fn(ell: jnp.ndarray, words: int = 16):
-    """Build a ``mex_fn(colors, pending, offset)`` for ``color_iterative``
-    that routes the first-fit through the Pallas firstfit kernel.
-
-    The offset-precedence mask (committed neighbors always forbid; pending
-    neighbors forbid iff at a smaller superstep offset) is applied to the
-    gathered ELL neighbor-color slab before the kernel — the same
-    "regularize, then go fast" split as DESIGN.md §2."""
-    v = ell.shape[0]
-
-    def mex_fn(colors, pending, offset):
-        cpad = jnp.concatenate([colors, jnp.zeros((1,), jnp.int32)])
-        ppad = jnp.concatenate([pending, jnp.zeros((1,), jnp.bool_)])
-        opad = jnp.concatenate(
-            [offset, jnp.full((1,), jnp.iinfo(jnp.int32).max, jnp.int32)])
-        ell_safe = jnp.minimum(ell, v)
-        nbr_c = cpad[ell_safe]
-        forbids = ~ppad[ell_safe] | (opad[ell_safe] < offset[:, None])
-        nbr = jnp.where(forbids & (ell < v), nbr_c, 0)
-        return firstfit(nbr, words=words, interpret=INTERPRET)
-    return mex_fn
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

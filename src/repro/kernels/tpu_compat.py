@@ -1,0 +1,12 @@
+"""Version shim for the Pallas TPU compiler-params rename.
+
+jax 0.4.37 exposes ``pltpu.TPUCompilerParams``; newer releases renamed it to
+``pltpu.CompilerParams``. Resolve whichever exists once, here, so kernel
+modules stay version-agnostic.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+TPUCompilerParams = getattr(pltpu, "TPUCompilerParams", None) or getattr(
+    pltpu, "CompilerParams")

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config
+from repro.jax_compat import set_mesh
 from repro.models import counting
 from repro.models.config import SHAPES
 from repro import models
@@ -106,7 +107,7 @@ def lower_cell(arch: str, shape_name: str, mesh, rules=DEFAULT_RULES,
             with activation_rules(rules):
                 return step(params, opt_state, batch)
 
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             lowered = jax.jit(
                 fn,
                 in_shardings=(p_sh, opt_sh, b_sh),
@@ -128,7 +129,7 @@ def lower_cell(arch: str, shape_name: str, mesh, rules=DEFAULT_RULES,
                 # serving returns last-position logits only
                 return logits[:, -1], caches
 
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             lowered = jax.jit(
                 fn, in_shardings=(p_sh, b_sh, c_sh), donate_argnums=(2,),
             ).lower(params_abs, batch_abs, cache_abs)
@@ -144,7 +145,7 @@ def lower_cell(arch: str, shape_name: str, mesh, rules=DEFAULT_RULES,
         with activation_rules(rules):
             return models.decode_step(cfg, params, caches, tokens)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = jax.jit(
             fn, in_shardings=(p_sh, c_sh, t_sh), donate_argnums=(1,),
         ).lower(params_abs, cache_abs, tok_abs)
@@ -155,17 +156,25 @@ def lower_coloring(mesh):
     """The paper's own workload on the production mesh (scale-24 RMAT)."""
     from repro.configs.rmat_coloring import get_config as get_col
     from repro.core.distributed import build_distributed_coloring
+    from repro.core.engine import get_backend
     ccfg = get_col()
+    if get_backend(ccfg.engine).needs_ell:
+        raise ValueError(
+            f"dry-run lowers the coloring cell from shapes alone; the "
+            f"{ccfg.engine!r} engine needs a real host graph for its ELL "
+            "width — use engine='sort' or 'bitmap' here (ELL engines run "
+            "via color_distributed)")
     D = int(np.prod(mesh.devices.shape))
     v = 1 << ccfg.dryrun_scale
     e2 = 2 * ccfg.edge_factor * v
     vl = -(-v // D)
     el = int(e2 / D * 1.35)  # slab padding headroom for R-MAT skew
     fn = build_distributed_coloring(mesh, vl, el, ccfg.local_concurrency,
-                                    ccfg.max_rounds)
+                                    ccfg.max_rounds, engine=ccfg.engine,
+                                    max_colors=ccfg.color_bound)
     lsrc = jax.ShapeDtypeStruct((D, el), jnp.int32)
     ldst = jax.ShapeDtypeStruct((D, el), jnp.int32)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = fn.lower(lsrc, ldst)
     return lowered, ccfg, None
 

@@ -208,12 +208,16 @@ def _dot_flops_of_line(ln: str, defs: Dict[str, str]) -> float:
     args = re.search(r"\bdot\(([^)]*)\)", ln)
     if not args:
         return 0.0
-    first = args.group(1).split(",")[0].strip()
-    mt = _SHAPE_RE.search(first)
+    arg_str = args.group(1)
+    # operand types may be inlined ("f32[8,128]{1,0} %lhs, ...") — naive
+    # comma-splitting would cut inside the dims, so take the first shape
+    # before the first operand name instead
+    head = arg_str.split("%")[0] if "%" in arg_str else arg_str
+    mt = _SHAPE_RE.search(head)
     if mt:
         lhs_dims = _dims(mt.group(2))
     else:
-        lhs_type = defs.get(first.split(" ")[-1].lstrip("%"), "")
+        lhs_type = defs.get(arg_str.split(",")[0].strip().split(" ")[-1].lstrip("%"), "")
         mt = _SHAPE_RE.search(lhs_type)
         if not mt:
             return 0.0

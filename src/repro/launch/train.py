@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import get_config, get_smoke_config
+from ..jax_compat import set_mesh
 from .. import models
 from ..train import (AdamWConfig, init_opt_state, make_train_step, checkpoint,
                      data)
@@ -42,7 +43,7 @@ def build(cfg, opt_cfg, ts_cfg, mesh=None):
         with activation_rules(rules):
             return step(p, o, b)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         jitted = jax.jit(fn, in_shardings=(p_sh, None, None),
                          donate_argnums=(0, 1))
     return params, opt_state, jitted, mesh

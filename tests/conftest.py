@@ -1,6 +1,27 @@
 import os
 import sys
 
+import pytest
+
 # tests run on the single real CPU device; the dry-run (and only the
 # dry-run) forces 512 host devices in its own process.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# archs whose smoke train step / decode takes tens of seconds on CPU; their
+# cases run under `-m slow`, keeping the default tier-1 suite fast. One
+# shared set so the per-file slow selections can't drift apart.
+SLOW_ARCHS = frozenset({
+    "recurrentgemma-2b", "deepseek-v2-lite-16b", "llama-3.2-vision-11b",
+    "whisper-medium", "grok-1-314b", "gemma2-2b",
+})
+
+
+def arch_params(arch_ids, slow_set=SLOW_ARCHS, extra_marks=None):
+    """Parametrize ids, marking ``slow_set`` members slow (plus any
+    per-arch ``extra_marks``: {arch: [marks]})."""
+    out = []
+    for a in arch_ids:
+        marks = [pytest.mark.slow] if a in slow_set else []
+        marks += (extra_marks or {}).get(a, [])
+        out.append(pytest.param(a, marks=marks) if marks else a)
+    return out

@@ -1,0 +1,242 @@
+"""Engine-layer tests: the MexBackend registry, the parity matrix across all
+registered backends, and the shared fixpoint machinery.
+
+The key invariant: every backend computes the *same exact function* (the
+per-vertex minimum excluded color), so swapping backends must not merely
+keep colorings valid — ITERATIVE must produce bit-identical colors, round
+counts and conflict histories, and DATAFLOW must equal serial greedy, under
+every backend.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (Graph, rmat, greedy_color, color_iterative,
+                        color_dataflow, validate_coloring,
+                        available_backends, get_backend, register_backend)
+from repro.core.engine import (BitmapMexBackend, MexBackend, SortMexBackend,
+                               edge_slots, lockstep_offsets, num_color_words)
+
+GRAPHS = ["RMAT-ER", "RMAT-G", "RMAT-B"]
+ENGINES = ["sort", "bitmap", "ell_pallas"]
+
+
+def _graph(name, scale=9, seed=1):
+    return rmat.paper_graph(name, scale=scale, seed=seed)
+
+
+def _device(g, engine):
+    layout = ("edges", "ell") if get_backend(engine).needs_ell else "edges"
+    return g.to_device(layout=layout)
+
+
+# ----------------------------------------------------------------- registry
+def test_default_backends_registered():
+    assert set(ENGINES) <= set(available_backends())
+
+
+def test_get_backend_by_name_and_instance():
+    assert get_backend("sort") is get_backend("sort")
+    inst = BitmapMexBackend(words=4)
+    assert get_backend(inst) is inst
+    with pytest.raises(ValueError, match="unknown mex backend"):
+        get_backend("no-such-engine")
+
+
+def test_register_custom_backend():
+    from repro.core import engine as engine_mod
+
+    class Doubler(SortMexBackend):
+        name = "sort-alias"
+
+    register_backend(Doubler())
+    try:
+        assert "sort-alias" in available_backends()
+        g = _graph("RMAT-ER", scale=8)
+        res = color_iterative(g.to_device(), concurrency=8,
+                              engine="sort-alias")
+        assert validate_coloring(g, np.asarray(res.colors))
+    finally:
+        # keep the process-global registry hermetic for later tests
+        engine_mod._REGISTRY.pop("sort-alias", None)
+
+
+def test_register_duplicate_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        register_backend(SortMexBackend())
+
+
+def test_ell_backend_requires_ell_layout():
+    g = _graph("RMAT-ER", scale=8)
+    with pytest.raises(ValueError, match="ELL layout"):
+        color_iterative(g.to_device(), engine="ell_pallas")
+
+
+def test_ell_backend_rejects_truncated_width():
+    """A truncated ELL layout drops forbids in the slab scatter; the backend
+    must refuse it rather than silently return an invalid coloring — and a
+    caller-asserted color_bound must not mask the truncation check."""
+    g = _graph("RMAT-ER", scale=8)
+    dg = g.to_device(layout=("edges", "ell"), ell_width=2)
+    with pytest.raises(ValueError, match="below the graph's max degree"):
+        color_iterative(dg, engine="ell_pallas")
+    with pytest.raises(ValueError, match="below the graph's max degree"):
+        color_iterative(dg, engine="ell_pallas", color_bound=2)
+
+
+def test_bitmap_backend_requires_color_bound():
+    with pytest.raises(ValueError, match="color bound"):
+        get_backend("bitmap").bind(num_vertices=8, max_colors=0)
+
+
+def test_undersized_words_override_rejected():
+    """An undersized words= override would drop forbids and silently corrupt
+    colorings (e.g. a 40-clique needs 42 slots, words=1 gives 32)."""
+    n = 40
+    edges = np.array([[i, j] for i in range(n) for j in range(i + 1, n)])
+    g = Graph.from_edges(n, edges)
+    with pytest.raises(ValueError, match="below the graph's Delta"):
+        color_iterative(g.to_device(), engine=BitmapMexBackend(words=1))
+    # a sufficient override is accepted
+    res = color_iterative(g.to_device(), engine=BitmapMexBackend(words=2))
+    assert validate_coloring(g, np.asarray(res.colors))
+    assert res.num_colors == n
+
+
+# ------------------------------------------------------------ parity matrix
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("name", GRAPHS)
+def test_all_backends_valid_coloring(name, engine):
+    """Every registered backend yields a valid coloring on every family."""
+    g = _graph(name)
+    res = color_iterative(_device(g, engine), concurrency=16, engine=engine)
+    assert validate_coloring(g, np.asarray(res.colors))
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("name", GRAPHS)
+def test_dataflow_equals_serial_under_every_backend(name, engine):
+    """DATAFLOW's fixpoint is the serial greedy coloring regardless of how
+    the inner mex is computed."""
+    g = _graph(name)
+    res = color_dataflow(_device(g, engine), engine=engine)
+    np.testing.assert_array_equal(np.asarray(res.colors), greedy_color(g))
+
+
+@pytest.mark.parametrize("name", GRAPHS)
+@pytest.mark.parametrize("concurrency", [4, 64])
+def test_sort_bitmap_identical_histories(name, concurrency):
+    """sort and bitmap compute the same mex, so at fixed concurrency the
+    speculation is deterministic: identical colors, rounds, and per-round
+    conflict/sweep counts."""
+    g = _graph(name)
+    dg = g.to_device()
+    a = color_iterative(dg, concurrency=concurrency, engine="sort")
+    b = color_iterative(dg, concurrency=concurrency, engine="bitmap")
+    np.testing.assert_array_equal(np.asarray(a.colors), np.asarray(b.colors))
+    assert a.rounds == b.rounds
+    np.testing.assert_array_equal(np.asarray(a.conflicts_per_round),
+                                  np.asarray(b.conflicts_per_round))
+    np.testing.assert_array_equal(np.asarray(a.sweeps_per_round),
+                                  np.asarray(b.sweeps_per_round))
+
+
+def test_backend_instance_as_engine():
+    """Drivers take MexBackend instances directly (parameterized words)."""
+    g = _graph("RMAT-ER", scale=8)
+    res = color_iterative(g.to_device(), concurrency=8,
+                          engine=BitmapMexBackend(words=4))
+    assert validate_coloring(g, np.asarray(res.colors))
+
+
+def test_color_bound_caps_table_capacity():
+    """A caller-asserted color_bound shrinks the table backends below the
+    provable Delta+1 bound without changing the result (true chromatic
+    usage is far below the cap on R-MAT)."""
+    g = _graph("RMAT-B")  # skewed: max_degree >> colors used
+    dg = g.to_device()
+    full = color_iterative(dg, concurrency=16, engine="bitmap")
+    capped = color_iterative(dg, concurrency=16, engine="bitmap",
+                             color_bound=64)
+    np.testing.assert_array_equal(np.asarray(full.colors),
+                                  np.asarray(capped.colors))
+    df_capped = color_dataflow(dg, engine="bitmap", color_bound=64)
+    np.testing.assert_array_equal(np.asarray(df_capped.colors),
+                                  greedy_color(g))
+
+
+# --------------------------------------------------------------- primitives
+def test_num_color_words():
+    assert num_color_words(1) == 1
+    assert num_color_words(30) == 1
+    assert num_color_words(31) == 2  # 31+2 > 32
+    assert num_color_words(500) == 16
+
+
+def test_bitmap_mex_matches_python_oracle():
+    """The scatter-or bitmap mex == straightforward python mex."""
+    rng = np.random.default_rng(0)
+    V, M = 17, 200
+    key_v = rng.integers(0, V + 1, M).astype(np.int32)  # V = inert
+    key_c = rng.integers(0, 40, M).astype(np.int32)
+    mex_fn = BitmapMexBackend().bind(num_vertices=V, max_colors=64)
+    got = np.asarray(mex_fn(jnp.asarray(key_v), jnp.asarray(key_c)))
+    for v in range(V):
+        present = {int(c) for vv, c in zip(key_v, key_c) if vv == v} | {0}
+        mex = 1
+        while mex in present:
+            mex += 1
+        assert got[v] == mex, v
+
+
+def test_edge_slots_matches_host_ell_positions():
+    g = _graph("RMAT-G", scale=8)
+    src, _dst = g.directed_edges()
+    slots = np.asarray(edge_slots(jnp.asarray(src), g.num_vertices))
+    want = np.arange(src.shape[0], dtype=np.int64) - g.row_ptr[src]
+    np.testing.assert_array_equal(slots, want)
+
+
+def test_lockstep_offsets_matches_block_assignment():
+    pending = jnp.asarray([True, False, True, True, False, True, True])
+    # 5 pending vertices, 2 threads -> block size 3; offsets 0,1,2,0,1
+    off = np.asarray(lockstep_offsets(pending, 2))
+    np.testing.assert_array_equal(off, [0, 0, 1, 2, 0, 0, 1])
+
+
+# ----------------------------------------------------------- layout surface
+def test_to_device_layouts():
+    g = _graph("RMAT-ER", scale=8)
+    dg = g.to_device()
+    assert not dg.has_csr and not dg.has_ell and dg.max_degree == g.max_degree()
+    dg = g.to_device(layout=("edges", "csr", "ell"))
+    assert dg.has_csr and dg.has_ell
+    assert dg.ell_width == max(1, g.max_degree())
+    np.testing.assert_array_equal(np.asarray(dg.row_ptr), g.row_ptr)
+    np.testing.assert_array_equal(np.asarray(dg.col_idx), g.col_idx)
+    with pytest.raises(ValueError, match="unknown layout"):
+        g.to_device(layout="csc")
+
+
+def test_device_graph_is_pytree():
+    import jax
+    g = _graph("RMAT-ER", scale=8)
+    dg = g.to_device(layout=("edges", "ell"))
+    leaves = jax.tree.leaves(dg)
+    assert len(leaves) == 3  # src, dst, ell_slot
+    dg2 = jax.tree.map(lambda x: x, dg)
+    assert dg2.num_vertices == dg.num_vertices
+    assert dg2.max_degree == dg.max_degree
+    assert dg2.ell_width == dg.ell_width
+
+
+def test_from_edges_lexsort_dedup():
+    """Duplicates / reversed duplicates / self-loops collapse identically to
+    the old linear-index dedup."""
+    edges = np.array([[0, 1], [1, 0], [0, 1], [2, 2], [1, 2], [2, 1], [3, 0]])
+    g = Graph.from_edges(4, edges)
+    assert g.num_edges == 3  # (0,1), (1,2), (0,3)
+    src, dst = g.directed_edges()
+    assert sorted(zip(src.tolist(), dst.tolist())) == [
+        (0, 1), (0, 3), (1, 0), (1, 2), (2, 1), (3, 0)]

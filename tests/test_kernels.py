@@ -6,7 +6,7 @@ import jax.numpy as jnp
 
 from repro.core import rmat, greedy_color, color_iterative, validate_coloring
 from repro.kernels import (firstfit, firstfit_ref, conflict_mask,
-                           conflict_mask_ref, ell_mex, make_kernel_mex_fn)
+                           conflict_mask_ref, ell_mex)
 
 
 @pytest.mark.parametrize("v,d", [(1, 1), (7, 3), (100, 17), (512, 16),
@@ -69,11 +69,15 @@ def test_ell_mex_against_graph():
 
 
 def test_iterative_with_kernel_mex_engine():
-    """ITERATIVE with the Pallas firstfit engine == valid coloring with the
-    same round structure as the sort engine."""
+    """ITERATIVE with the Pallas firstfit engine (engine="ell_pallas", bound
+    to the graph's ELL layout) == valid coloring with the same round
+    structure as the sort engine."""
     g = rmat.paper_graph("RMAT-ER", scale=8, seed=3)
-    ell, _ = g.to_ell()
-    mex_fn = make_kernel_mex_fn(jnp.asarray(ell))
-    res_k = color_iterative(g.to_device(), concurrency=g.num_vertices,
-                            mex_fn=mex_fn)
+    dg = g.to_device(layout=("edges", "ell"))
+    res_k = color_iterative(dg, concurrency=g.num_vertices,
+                            engine="ell_pallas")
+    res_s = color_iterative(dg, concurrency=g.num_vertices)
     assert validate_coloring(g, np.asarray(res_k.colors))
+    assert res_k.rounds == res_s.rounds
+    np.testing.assert_array_equal(np.asarray(res_k.conflicts_per_round),
+                                  np.asarray(res_s.conflicts_per_round))

@@ -40,7 +40,10 @@ def test_forward_shapes_and_finite(arch):
     assert abs(float(metrics["nll"]) - np.log(cfg.vocab_size)) < 1.5
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+from conftest import arch_params
+
+
+@pytest.mark.parametrize("arch", arch_params(ARCH_IDS))
 def test_one_train_step(arch):
     cfg = get_smoke_config(arch)
     params, _ = models.init_params(cfg, jax.random.PRNGKey(0))

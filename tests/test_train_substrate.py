@@ -160,6 +160,7 @@ def test_prefetch_waves_conflict_free():
 
 # ------------------------------------------------------------ compression
 def test_compressed_psum_close_to_exact():
+    from repro.jax_compat import shard_map
     from repro.parallel.compression import compressed_psum
     import jax
     # single-device psum via shard_map over a trivial mesh
@@ -169,8 +170,8 @@ def test_compressed_psum_close_to_exact():
     def f(x):
         return compressed_psum(x, "d", jax.random.PRNGKey(0))
 
-    y = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=jax.sharding.PartitionSpec(),
-                              out_specs=jax.sharding.PartitionSpec()))(x)
+    y = jax.jit(shard_map(f, mesh=mesh, in_specs=jax.sharding.PartitionSpec(),
+                          out_specs=jax.sharding.PartitionSpec()))(x)
     err = np.abs(np.asarray(y) - np.asarray(x)).max()
     scale = np.abs(np.asarray(x)).max() / 127
     assert err <= 1.01 * scale  # one quantization step
