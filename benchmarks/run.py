@@ -4,17 +4,26 @@ Emits ``name,us_per_call,derived`` CSV rows plus per-benchmark detail blocks.
 Scales are CPU-feasible reductions of the paper's scale-24..27 graphs (the
 claims validated are structural/relative, not absolute wall-clock).
 
-  table2_graph_properties   — paper Table 2 (+Table 4 columns) at scale S
-  fig7_9_strong_scaling     — ITERATIVE runtime vs concurrency (proxy for
-                              thread scaling: vectorized rounds on CPU)
-  fig10_conflicts           — conflicts per round / total / iterations
-  fig11_colors              — colors vs concurrency vs serial, all graphs
-  dataflow_exactness        — DATAFLOW == serial greedy + sweep counts
-  engine_compare            — sort vs bitmap (vs ell_pallas) mex backends on
-                              all three graph families: us_per_call plus
-                              per-round sweep/conflict counts
-  kernel_firstfit           — Pallas firstfit engine vs sort engine timing
-  comm_schedule             — coloring-scheduled all-to-all rounds
+Benchmark-family registry (run all by default; select with
+``--families a,b,...``; every family accepts the global ``--scale``
+override, ``engine_compare`` additionally honors ``--ell``):
+
+  family                    | what it measures                 | default scale
+  --------------------------|----------------------------------|--------------
+  table2_graph_properties   | paper Table 2 (+Table 4 columns) | 16
+  fig7_9_strong_scaling     | ITERATIVE cost vs concurrency    | 15
+  fig10_conflicts           | conflicts/round, total, iters    | 16
+  fig11_colors              | colors vs concurrency vs serial  | 15
+  dataflow_exactness        | DATAFLOW == serial + sweep count | 15
+  engine_compare            | sort vs bitmap (vs ell_pallas    | 13
+                            | with --ell) mex backends         |
+  d2_compare                | distance-2 + bipartite partial-  | 9
+                            | D2 models vs serial D2/PD2       |
+                            | oracles, sort/bitmap parity      |
+  kernel_firstfit           | Pallas firstfit vs sort engine   | 13
+  comm_schedule             | coloring-scheduled all-to-all    | (none)
+
+See README.md §Benchmarks for the full CLI documentation.
 """
 from __future__ import annotations
 
@@ -26,10 +35,13 @@ import numpy as np
 
 import jax
 
-from repro.core import (rmat, greedy_color, color_iterative, color_dataflow,
-                        dataflow_levels, validate_coloring, num_colors,
-                        schedule_transfers)
+from repro.core import (rmat, BipartiteGraph, greedy_color, greedy_color_d2,
+                        greedy_color_pd2, color_iterative, color_dataflow,
+                        dataflow_levels, validate_coloring,
+                        validate_d2_coloring, validate_pd2_coloring,
+                        num_colors, schedule_transfers)
 from repro.core.comm_schedule import moe_all_to_all_transfers
+from repro.core.distance2 import wedge_count
 
 GRAPHS = ["RMAT-ER", "RMAT-G", "RMAT-B"]
 ROWS = []
@@ -168,6 +180,54 @@ def engine_compare(scale=13, concurrency=256, with_ell=False):
                     f"backend divergence on {name}: {ref} != {(cpr, spr)}"
 
 
+def d2_compare(scale=9):
+    """Coloring-model shootout: distance-2 and bipartite partial distance-2
+    through the same engine (repro.core.distance2). Validates each parallel
+    D2 coloring against the serial D2 oracle, checks sort/bitmap backend
+    parity under model="d2" (identical colors + histories), and reports the
+    D2-vs-D1 color/constraint blowup per graph family; plus a PD2 row on a
+    random bipartite graph (Jacobian-compression shape)."""
+    print(f"\n== d2 compare: D2/PD2 models vs oracles (scale {scale}) ==")
+    for name in GRAPHS:
+        g = rmat.paper_graph(name, scale=scale, seed=0)
+        serial_d2 = greedy_color_d2(g)
+        df = color_dataflow(g, model="d2")
+        assert np.array_equal(np.asarray(df.colors), serial_d2), \
+            "DATAFLOW(d2) must equal the serial D2 oracle"
+        ref = None
+        for eng in ["sort", "bitmap"]:
+            # D2 constraint graphs are ~avg_degree x denser, so speculation
+            # conflicts more per round: keep concurrency moderate and the
+            # round cap generous
+            res, us = _timed(color_iterative, g, concurrency=16, engine=eng,
+                             model="d2", max_rounds=256, repeat=1)
+            assert validate_d2_coloring(g, np.asarray(res.colors)), (name, eng)
+            cols = np.asarray(res.colors)
+            if ref is None:
+                ref = cols
+            else:
+                assert np.array_equal(cols, ref), \
+                    f"sort/bitmap divergence under model=d2 on {name}"
+            _row(f"d2/{name}/{eng}", us,
+                 f"colors={res.num_colors};serial_d2={int(serial_d2.max())};"
+                 f"d1_serial={num_colors(greedy_color(g))};"
+                 f"rounds={res.rounds};conflicts={res.total_conflicts};"
+                 f"wedges={wedge_count(g)}")
+    rng = np.random.default_rng(0)
+    L, R = 1 << scale, 1 << (scale - 1)
+    edges = np.stack([rng.integers(0, L, 8 * L), rng.integers(0, R, 8 * L)], 1)
+    bg = BipartiteGraph.from_edges(L, R, edges)
+    serial_pd2 = greedy_color_pd2(bg)
+    res, us = _timed(color_iterative, bg, concurrency=16, model="pd2",
+                     max_rounds=256, repeat=1)
+    assert validate_pd2_coloring(bg, np.asarray(res.colors))
+    dfp = color_dataflow(bg, model="pd2")
+    assert np.array_equal(np.asarray(dfp.colors), serial_pd2)
+    _row(f"d2/bipartite-{L}x{R}/pd2", us,
+         f"colors={res.num_colors};serial_pd2={int(serial_pd2.max())};"
+         f"rounds={res.rounds};conflicts={res.total_conflicts}")
+
+
 def kernel_firstfit(scale=13):
     print(f"\n== Pallas firstfit engine vs sort-mex engine (scale {scale}) ==")
     g = rmat.paper_graph("RMAT-G", scale=scale, seed=0)
@@ -193,24 +253,47 @@ def comm_schedule_bench():
              f"lower_bound={sch.lower_bound};gap={sch.optimality_gap:.2f}")
 
 
+# family name -> (runner(args, scale), default scale or None). The default
+# lives HERE only (main() applies ``--scale`` over it); keep the
+# module-docstring table in sync. --help lists exactly these names.
+FAMILIES = {
+    "table2_graph_properties":
+        (lambda a, s: table2_graph_properties(scale=s), 16),
+    "fig7_9_strong_scaling": (lambda a, s: fig7_9_strong_scaling(scale=s), 15),
+    "fig10_conflicts": (lambda a, s: fig10_conflicts(scale=s), 16),
+    "fig11_colors": (lambda a, s: fig11_colors(scale=s), 15),
+    "dataflow_exactness": (lambda a, s: dataflow_exactness(scale=s), 15),
+    "engine_compare":
+        (lambda a, s: engine_compare(scale=s, with_ell=a.ell), 13),
+    "d2_compare": (lambda a, s: d2_compare(scale=s), 9),
+    "kernel_firstfit": (lambda a, s: kernel_firstfit(scale=s), 13),
+    "comm_schedule": (lambda a, s: comm_schedule_bench(), None),
+}
+
+
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="paper-reproduction benchmark harness; families: "
+                    + ", ".join(FAMILIES))
+    ap.add_argument("--families", default=None, metavar="A,B,...",
+                    help="comma-separated subset of benchmark families to "
+                         f"run (default: all). Known: {', '.join(FAMILIES)}")
     ap.add_argument("--scale", type=int, default=None,
-                    help="override graph scale for the heavy benchmarks")
+                    help="override graph scale for the heavy benchmarks "
+                         "(per-family defaults in the registry table)")
     ap.add_argument("--ell", action="store_true",
                     help="include the ell_pallas backend in engine_compare "
                          "(slow off-TPU: kernels run in interpret mode)")
     args = ap.parse_args()
-    s = args.scale
+    selected = (list(FAMILIES) if args.families is None
+                else [f.strip() for f in args.families.split(",") if f.strip()])
+    unknown = [f for f in selected if f not in FAMILIES]
+    if unknown:
+        ap.error(f"unknown families {unknown}; known: {', '.join(FAMILIES)}")
     print("name,us_per_call,derived")
-    table2_graph_properties(scale=s or 16)
-    fig7_9_strong_scaling(scale=s or 15)
-    fig10_conflicts(scale=s or 16)
-    fig11_colors(scale=s or 15)
-    dataflow_exactness(scale=s or 15)
-    engine_compare(scale=s or 13, with_ell=args.ell)
-    kernel_firstfit(scale=s or 13)
-    comm_schedule_bench()
+    for fam in selected:
+        runner, default_scale = FAMILIES[fam]
+        runner(args, args.scale or default_scale)
     print("\n-- CSV --")
     print("name,us_per_call,derived")
     for r in ROWS:

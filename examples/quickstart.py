@@ -6,17 +6,21 @@ dataflow fixpoint (Alg. 3-5, TPU adaptation), and validates the results.
 
 The first-fit inner loop is pluggable (``--engine sort|bitmap|ell_pallas``,
 see repro.core.engine); the ELL kernel path just needs the graph built in
-the ELL layout — no hand-wired kernel closures.
+the ELL layout — no hand-wired kernel closures. The coloring model is
+pluggable too (``--model d1|d2``, see repro.core.distance2): ``d2`` colors
+so that even two-hop neighbors differ, validated against the serial
+distance-2 oracle.
 
     PYTHONPATH=src python examples/quickstart.py [--scale 12] [--engine bitmap]
+    PYTHONPATH=src python examples/quickstart.py --scale 8 --model d2
 """
 import argparse
 
 import numpy as np
 
-from repro.core import (rmat, greedy_color, color_iterative, color_dataflow,
-                        validate_coloring, num_colors, available_backends,
-                        get_backend)
+from repro.core import (rmat, greedy_color, greedy_color_d2, color_iterative,
+                        color_dataflow, validate_coloring,
+                        validate_d2_coloring, num_colors, available_backends)
 
 
 def main():
@@ -25,28 +29,34 @@ def main():
     ap.add_argument("--concurrency", type=int, default=128)
     ap.add_argument("--engine", default="sort", choices=available_backends(),
                     help="first-fit mex backend for ITERATIVE/DATAFLOW")
+    ap.add_argument("--model", default="d1", choices=["d1", "d2"],
+                    help="coloring model: distance-1 or distance-2 "
+                         "(d2 is denser — prefer --scale <= 9)")
     args = ap.parse_args()
 
-    layout = ("edges", "ell") if get_backend(args.engine).needs_ell else "edges"
+    serial_fn = greedy_color if args.model == "d1" else greedy_color_d2
+    valid_fn = validate_coloring if args.model == "d1" else validate_d2_coloring
+    # D2 constraint graphs are ~avg-degree x denser: conflict rounds rise
+    p = args.concurrency if args.model == "d1" else min(args.concurrency, 16)
     for name in ["RMAT-ER", "RMAT-G", "RMAT-B"]:
         g = rmat.paper_graph(name, scale=args.scale, seed=0)
-        dg = g.to_device(layout=layout)
 
-        serial = greedy_color(g)
-        it = color_iterative(dg, concurrency=args.concurrency,
-                             engine=args.engine)
-        df = color_dataflow(dg, engine=args.engine)
+        serial = serial_fn(g)
+        it = color_iterative(g, concurrency=p, engine=args.engine,
+                             model=args.model, max_rounds=256)
+        df = color_dataflow(g, engine=args.engine, model=args.model)
 
-        assert validate_coloring(g, serial)
-        assert validate_coloring(g, np.asarray(it.colors))
-        assert validate_coloring(g, np.asarray(df.colors))
+        assert valid_fn(g, serial)
+        assert valid_fn(g, np.asarray(it.colors))
+        assert valid_fn(g, np.asarray(df.colors))
         exact = np.array_equal(np.asarray(df.colors), serial)
 
         s = g.stats()
         print(f"{name}: |V|={s['num_vertices']} |E|={s['num_edges']} "
-              f"maxdeg={s['max_degree']} engine={args.engine}")
+              f"maxdeg={s['max_degree']} engine={args.engine} "
+              f"model={args.model}")
         print(f"  serial greedy : {num_colors(serial):3d} colors")
-        print(f"  ITERATIVE(P={args.concurrency}): {it.num_colors:3d} colors, "
+        print(f"  ITERATIVE(P={p}): {it.num_colors:3d} colors, "
               f"{it.rounds} rounds, {it.total_conflicts} conflicts")
         print(f"  DATAFLOW      : {df.num_colors:3d} colors, "
               f"{df.sweeps} sweeps, identical to serial: {exact}")

@@ -25,9 +25,15 @@ class ColoringConfig:
     # "ell_pallas" needs a real host graph (for the ELL width) and is only
     # reachable through color_distributed.
     engine: str = "sort"
+    # coloring model ("d1" | "d2" | "pd2" — repro.core.distance2). At
+    # dry-run time the model only changes the constraint-slab width (D2
+    # edges ~ avg_degree x the D1 count) and the color-bound headroom; the
+    # lowered BSP program is otherwise identical.
+    model: str = "d1"
     # static color-capacity bound for the bitmap backend at dry-run time
     # (no host graph to read max_degree from; greedy on the paper's graphs
-    # stays <= 143 colors, so 512 leaves ample headroom)
+    # stays <= 143 colors, so 512 leaves ample headroom; D2 colorings use
+    # up to ~avg_degree x more — still far below 512 at edge factor 8)
     color_bound: int = 512
 
 

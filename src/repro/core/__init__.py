@@ -1,34 +1,51 @@
-"""repro.core — the paper's contribution: parallel greedy distance-1 coloring.
+"""repro.core — the paper's contribution: parallel greedy graph coloring,
+generalized to a family of coloring models behind one engine.
 
 Public API:
-  Graph / DeviceGraph            containers (host CSR + layout-aware device
-                                 arrays: edge list / CSR / ELL)
+  Graph / BipartiteGraph /       containers (host CSR, bipartite two-sided
+  DeviceGraph                    CSR, layout-aware device arrays: edge
+                                 list / CSR / ELL)
   rmat.generate / paper_graph    R-MAT test-graph generation (paper §4)
-  greedy_color                   serial oracle (Alg. 1)
+  greedy_color                   serial distance-1 oracle (Alg. 1)
+  greedy_color_d2 / _pd2         serial distance-2 / partial-D2 oracles
   color_iterative                speculation+iteration (Alg. 2), JAX
   color_dataflow                 dataflow fixpoint (Alg. 3-5 on TPU), JAX
   dataflow_levels                DAG depth / wavefront profile
   color_distributed              shard_map BSP coloring (Bozdag-style)
+  model="d1"|"d2"|"pd2"          coloring model on every driver: distance-1,
+                                 distance-2, bipartite partial distance-2
+                                 (distance2.py lowers them into the
+                                 engine's edge space)
   engine                         pluggable first-fit backends: MexBackend,
                                  register_backend, fixpoint_sweep;
                                  engine="sort" | "bitmap" | "ell_pallas"
+  distance2                      the model layer: square, partial_square,
+                                 d2_device_graph, pd2_device_graph
+  validate_coloring / _d2 / _pd2 per-model validity + conflict counting
   comm_schedule                  coloring -> conflict-free collective rounds
 """
-from .graph import Graph, DeviceGraph
-from . import rmat, ordering, engine
+from .graph import Graph, BipartiteGraph, DeviceGraph
+from . import rmat, ordering, engine, distance2
 from .engine import (MexBackend, available_backends, get_backend,
                      register_backend)
-from .greedy_ref import greedy_color
+from .distance2 import square, partial_square
+from .greedy_ref import greedy_color, greedy_color_d2, greedy_color_pd2
 from .iterative import color_iterative, ColoringResult
 from .dataflow import color_dataflow, dataflow_levels, DataflowResult
-from .metrics import validate_coloring, count_conflicts, num_colors
+from .metrics import (validate_coloring, count_conflicts, num_colors,
+                      validate_d2_coloring, count_d2_conflicts,
+                      validate_pd2_coloring, count_pd2_conflicts)
 from .distributed import color_distributed
 from .comm_schedule import schedule_transfers, CommSchedule
 
 __all__ = [
-    "Graph", "DeviceGraph", "rmat", "ordering", "engine", "greedy_color",
+    "Graph", "BipartiteGraph", "DeviceGraph", "rmat", "ordering", "engine",
+    "distance2", "square", "partial_square",
+    "greedy_color", "greedy_color_d2", "greedy_color_pd2",
     "MexBackend", "available_backends", "get_backend", "register_backend",
     "color_iterative", "ColoringResult", "color_dataflow", "dataflow_levels",
     "DataflowResult", "validate_coloring", "count_conflicts", "num_colors",
+    "validate_d2_coloring", "count_d2_conflicts",
+    "validate_pd2_coloring", "count_pd2_conflicts",
     "color_distributed", "schedule_transfers", "CommSchedule",
 ]

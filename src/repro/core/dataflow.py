@@ -32,6 +32,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .distance2 import as_constraint_graph
 from .engine import (EngineSpec, SweepSpec, fixpoint_iterate, fixpoint_sweep,
                      get_backend)
 from .graph import DeviceGraph
@@ -69,13 +70,21 @@ def _dataflow_impl(g: DeviceGraph, *, max_sweeps: int, backend,
     return colors, n, changed
 
 
-def color_dataflow(g: DeviceGraph, max_sweeps: int = 4096,
+def color_dataflow(g, max_sweeps: int = 4096,
                    engine: EngineSpec = "sort",
-                   color_bound: int = 0) -> DataflowResult:
+                   color_bound: int = 0, model: str = "d1") -> DataflowResult:
     """``color_bound`` caps the table backends' capacity below Delta+1 —
-    a caller-asserted bound, as in :func:`color_iterative`."""
+    a caller-asserted bound, as in :func:`color_iterative`.
+
+    ``model`` selects the coloring semantics ("d1" | "d2" | "pd2"), lowered
+    exactly as in :func:`color_iterative`; under "d2"/"pd2" the fixpoint
+    reproduces the *serial D2/PD2 greedy* in index order
+    (:func:`repro.core.greedy_ref.greedy_color_d2` / ``greedy_color_pd2``),
+    since the lowering is index-preserving."""
+    backend = get_backend(engine)
+    g = as_constraint_graph(g, model, needs_ell=backend.needs_ell)
     colors, sweeps, pending = _dataflow_impl(
-        g, max_sweeps=max_sweeps, backend=get_backend(engine),
+        g, max_sweeps=max_sweeps, backend=backend,
         color_bound=int(color_bound))
     if bool(pending):
         raise RuntimeError(f"DATAFLOW did not converge in {max_sweeps} sweeps")

@@ -1,0 +1,300 @@
+"""The coloring-model layer: distance-2 and partial distance-2 lowerings.
+
+The engine (`repro.core.engine`) colors *constraint graphs*: its SweepSpec
+edge space is just "who forbids whom". Distance-1 coloring feeds it the
+graph's own edge list; richer coloring models used in scientific computing
+(Jacobian/Hessian compression — Gebremedhin et al.'s survey; Taş et al.
+arXiv:1701.02628 for the bipartite multicore case; Bogle et al.
+arXiv:2107.00075 for distributed D2) differ ONLY in that edge space:
+
+* ``model="d1"``  — the graph's edges (adjacent vertices differ);
+* ``model="d2"``  — pairs at distance <= 2 differ. Equivalently distance-1
+  coloring of the square graph G²; constraints are (edge, edge) *wedges*
+  v—w—u sharing a middle vertex, plus the distance-1 pairs;
+* ``model="pd2"`` — bipartite partial distance-2: color ONE vertex class of
+  a :class:`repro.core.graph.BipartiteGraph` so that two same-class
+  vertices sharing a neighbor differ (the structure of column compression
+  of a sparse Jacobian). Constraints are the wedges through the *other*
+  class only — same-class vertices are never adjacent, so there is no
+  distance-1 term.
+
+Because every driver (`color_iterative`, `color_dataflow`, the distributed
+local solve) already lowers an arbitrary constraint edge list into per-round
+:class:`repro.core.engine.SweepSpec`\\ s, supporting a new model is exactly
+one host-side lowering — no new sweep loop, no new mex backend, identical
+speculation/conflict semantics, and full backend parity (sort == bitmap ==
+ell_pallas) for free.
+
+Two lowering strategies (``strategy=``):
+
+* ``"wedge"``  — emit the wedge *multiset* directly: for every directed edge
+  (v, w), one entry per u in adj(w) (self wedges v—w—v masked inert). No
+  sort, no dedup — O(W) sequential construction where
+  W = sum_e deg(dst(e)) — so G² is never materialized; duplicate forbids
+  are harmless to the mex (idempotent) and invisible to conflict counting
+  (the pending reduction is per-vertex). Memory-lean when degrees allow
+  (W within budget); blocks per-edge, row-contiguous in ``src``.
+* ``"square"`` — materialize G² on host via :func:`square` (lexsort +
+  dedup over the same W pairs): a bigger host peak, but the deduped device
+  edge list (|E(G²)| <= W) is smaller, and all DeviceGraph layouts
+  (CSR/ELL — the ``ell_pallas`` backend) become available.
+* ``"auto"``   — ``"square"`` when the ELL layout is requested (the slab
+  scatter needs deduped, width-bounded rows), else ``"wedge"``.
+
+Both strategies produce the same constraint *set*, so drivers produce
+bit-identical colors, rounds and conflict histories under either.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from .graph import BipartiteGraph, DeviceGraph, Graph
+
+MODELS = ("d1", "d2", "pd2")
+_STRATEGIES = ("auto", "wedge", "square")
+
+
+# --------------------------------------------------------------------------
+# host-side wedge expansion
+# --------------------------------------------------------------------------
+def _expand_rows(row_ptr: np.ndarray, col_idx: np.ndarray,
+                 targets: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Concatenate the CSR rows of ``targets`` (repeats preserved).
+
+    Returns (values, counts) where ``values`` is the concatenation of
+    ``col_idx[row_ptr[t]:row_ptr[t+1]]`` for each t in ``targets`` in order,
+    and ``counts[i]`` is the length contributed by ``targets[i]``. Pure
+    fancy-indexing — no sort, no python loop."""
+    counts = (row_ptr[targets + 1] - row_ptr[targets]).astype(np.int64)
+    total = int(counts.sum())
+    if total == 0:
+        return np.zeros(0, np.int32), counts
+    block_starts = np.cumsum(counts) - counts
+    pos = np.arange(total, dtype=np.int64) - np.repeat(block_starts, counts)
+    return col_idx[np.repeat(row_ptr[targets], counts) + pos], counts
+
+
+def wedge_count(graph: Graph) -> int:
+    """W = sum over directed edges (v, w) of deg(w) — the size of the D2
+    wedge multiset (before adding the 2E distance-1 pairs). The memory the
+    ``"wedge"`` strategy commits to; callers can pre-check it against their
+    budget before choosing a strategy."""
+    _src, dst = graph.directed_edges()
+    deg = graph.degrees()
+    return int(deg[dst].sum())
+
+
+def d2_pairs(graph: Graph) -> Tuple[np.ndarray, np.ndarray, int]:
+    """The distance-<=2 constraint multiset as (src, dst, live) arrays.
+
+    Per directed edge (v, w), emits the block [(v, w), (v, u) for u in
+    adj(w)] — so the result is row-contiguous in ``src`` (edge blocks stay
+    in CSR edge order). Self wedges v—w—v are masked inert: both endpoints
+    set to the phantom vertex V, exactly the padding convention DeviceGraph
+    edge lists already use. ``live`` is the number of unmasked entries."""
+    V = graph.num_vertices
+    src, dst = graph.directed_edges()
+    two_hop, counts = _expand_rows(graph.row_ptr, graph.col_idx, dst)
+    sizes = counts + 1
+    total = int(sizes.sum())
+    fsrc = np.repeat(src, sizes).astype(np.int32)
+    fdst = np.empty(total, np.int32)
+    starts = np.cumsum(sizes) - sizes
+    head = np.zeros(total, np.bool_)
+    head[starts] = True
+    fdst[head] = dst
+    fdst[~head] = two_hop
+    self_pair = fsrc == fdst  # only wedges u == v; d1 pairs have no loops
+    fsrc[self_pair] = V
+    fdst[self_pair] = V
+    return fsrc, fdst, total - int(self_pair.sum())
+
+
+def square(graph: Graph) -> Graph:
+    """G² as a host :class:`Graph`: vertices of ``graph``, an edge between
+    every pair at distance 1 or 2. Distance-2 coloring of G == distance-1
+    coloring of G², so this is the exact (dedup'd) lowering — and the input
+    to the distributed driver, whose partitioner wants a real host CSR."""
+    fsrc, fdst, _ = d2_pairs(graph)
+    keep = fsrc < graph.num_vertices
+    return Graph.from_edges(graph.num_vertices,
+                            np.stack([fsrc[keep], fdst[keep]], axis=1))
+
+
+def pd2_pairs(bg: BipartiteGraph, side: str = "left"
+              ) -> Tuple[np.ndarray, np.ndarray, int]:
+    """The partial-D2 constraint multiset over one vertex class.
+
+    For ``side="left"``: per (left v, right r) edge, one entry (v, u) for
+    each left u in adj(r), self pairs masked inert. Row-contiguous in the
+    colored class."""
+    if side == "left":
+        n, a_ptr, a_idx, b_ptr, b_idx = (bg.num_left, bg.l2r_ptr, bg.l2r_idx,
+                                         bg.r2l_ptr, bg.r2l_idx)
+    elif side == "right":
+        n, a_ptr, a_idx, b_ptr, b_idx = (bg.num_right, bg.r2l_ptr, bg.r2l_idx,
+                                         bg.l2r_ptr, bg.l2r_idx)
+    else:
+        raise ValueError(f"side must be 'left' or 'right', got {side!r}")
+    deg = np.diff(a_ptr).astype(np.int64)
+    src = np.repeat(np.arange(n, dtype=np.int32), deg)
+    back, counts = _expand_rows(b_ptr, b_idx, a_idx)
+    fsrc = np.repeat(src, counts).astype(np.int32)
+    fdst = back.astype(np.int32)
+    self_pair = fsrc == fdst
+    fsrc[self_pair] = n
+    fdst[self_pair] = n
+    return fsrc, fdst, fsrc.shape[0] - int(self_pair.sum())
+
+
+def partial_square(bg: BipartiteGraph, side: str = "left") -> Graph:
+    """The one-mode projection of ``bg`` onto ``side``: a host
+    :class:`Graph` joining same-class vertices that share a neighbor.
+    PD2 coloring of ``bg`` == distance-1 coloring of this graph."""
+    n = bg.num_left if side == "left" else bg.num_right
+    fsrc, fdst, _ = pd2_pairs(bg, side)
+    keep = fsrc < n
+    return Graph.from_edges(n, np.stack([fsrc[keep], fdst[keep]], axis=1))
+
+
+# --------------------------------------------------------------------------
+# DeviceGraph lowerings
+# --------------------------------------------------------------------------
+def _multiset_device_graph(num_vertices: int, fsrc: np.ndarray,
+                           fdst: np.ndarray, live: int) -> DeviceGraph:
+    """Wrap a constraint-pair multiset as an edges-layout DeviceGraph.
+
+    ``max_degree`` is the max *multiset* row count — an over-bound on the
+    true constraint degree (duplicates and masked self pairs only inflate
+    it), so table backends sized from it can never drop a forbid."""
+    row_count = np.bincount(fsrc[fsrc < num_vertices],
+                            minlength=num_vertices)
+    return DeviceGraph(
+        num_vertices=num_vertices,
+        num_directed_edges=live,
+        src=jnp.asarray(fsrc),
+        dst=jnp.asarray(fdst),
+        max_degree=int(row_count.max()) if row_count.size else 0,
+    )
+
+
+def d2_device_graph(graph: Graph, *, strategy: str = "auto",
+                    layout: Union[str, Sequence[str]] = "edges",
+                    pad_edges_to: Optional[int] = None) -> DeviceGraph:
+    """Lower ``graph`` to the distance-2 constraint DeviceGraph the engine
+    colors. See the module docstring for the ``strategy`` trade-off."""
+    strategy = _resolve_strategy(strategy, layout, pad_edges_to)
+    if strategy == "square":
+        return square(graph).to_device(layout=layout,
+                                       pad_edges_to=pad_edges_to)
+    return _multiset_device_graph(graph.num_vertices, *d2_pairs(graph))
+
+
+def pd2_device_graph(bg: BipartiteGraph, *, side: str = "left",
+                     strategy: str = "auto",
+                     layout: Union[str, Sequence[str]] = "edges",
+                     pad_edges_to: Optional[int] = None) -> DeviceGraph:
+    """Lower one class of ``bg`` to its partial-D2 constraint DeviceGraph
+    (vertices = the colored class)."""
+    strategy = _resolve_strategy(strategy, layout, pad_edges_to)
+    if strategy == "square":
+        return partial_square(bg, side).to_device(layout=layout,
+                                                  pad_edges_to=pad_edges_to)
+    n = bg.num_left if side == "left" else bg.num_right
+    return _multiset_device_graph(n, *pd2_pairs(bg, side))
+
+
+def _resolve_strategy(strategy: str, layout: Union[str, Sequence[str]],
+                      pad_edges_to: Optional[int] = None) -> str:
+    """Pick/validate the lowering strategy. The wedge multiset carries no
+    CSR/ELL geometry and its length is data-dependent, so CSR/ELL layouts
+    and ``pad_edges_to`` force (under ``"auto"``) or require (explicitly)
+    the square lowering — never silently dropped."""
+    if strategy not in _STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r}; "
+                         f"choose from {_STRATEGIES}")
+    layouts = (layout,) if isinstance(layout, str) else tuple(layout)
+    needs_square = (pad_edges_to is not None
+                    or "ell" in layouts or "csr" in layouts)
+    if strategy == "auto":
+        return "square" if needs_square else "wedge"
+    if strategy == "wedge" and needs_square:
+        raise ValueError(
+            "strategy='wedge' emits an edge multiset (duplicates, inert "
+            "masks) with no CSR/ELL geometry or shape padding; use "
+            f"strategy='square' for layout={layouts}, "
+            f"pad_edges_to={pad_edges_to}")
+    return strategy
+
+
+# --------------------------------------------------------------------------
+# the model= entry point the drivers thread through
+# --------------------------------------------------------------------------
+def as_constraint_graph(g, model: str = "d1", *, needs_ell: bool = False,
+                        strategy: str = "auto",
+                        side: str = "left") -> DeviceGraph:
+    """Resolve a driver's ``(g, model=)`` arguments to the constraint
+    DeviceGraph the engine actually colors.
+
+    Accepted ``g`` per model:
+      d1   DeviceGraph (used as-is) or host Graph (``to_device()``-ed);
+      d2   host Graph — the two-hop expansion needs the host CSR;
+      pd2  BipartiteGraph — ``side`` picks the colored class.
+
+    ``needs_ell`` (set when the chosen mex backend requires the ELL
+    layout) forces the ELL-capable lowering."""
+    if model not in MODELS:
+        raise ValueError(f"unknown coloring model {model!r}; "
+                         f"choose from {MODELS}")
+    layout = ("edges", "ell") if needs_ell else "edges"
+    if isinstance(g, DeviceGraph):
+        if model != "d1":
+            raise ValueError(
+                f"model={model!r} needs the host graph (two-hop expansion "
+                "reads the host CSR): pass a Graph"
+                + ("/BipartiteGraph" if model == "pd2" else "")
+                + " instead of a DeviceGraph")
+        return g
+    if isinstance(g, BipartiteGraph):
+        if model != "pd2":
+            raise ValueError(
+                f"BipartiteGraph only supports model='pd2' (got "
+                f"model={model!r}); project it to a Graph first for "
+                "d1/d2 semantics")
+        return pd2_device_graph(g, side=side, strategy=strategy,
+                                layout=layout)
+    if not isinstance(g, Graph):
+        raise TypeError(f"expected Graph/BipartiteGraph/DeviceGraph, "
+                        f"got {type(g).__name__}")
+    if model == "pd2":
+        raise ValueError("model='pd2' needs a BipartiteGraph (which vertex "
+                         "class would be colored?)")
+    if model == "d1":
+        return g.to_device(layout=layout)
+    return d2_device_graph(g, strategy=strategy, layout=layout)
+
+
+def constraint_host_graph(g, model: str = "d1", *,
+                          side: str = "left") -> Graph:
+    """Host-side counterpart of :func:`as_constraint_graph` for drivers
+    that partition on host (``color_distributed``): returns the host
+    constraint :class:`Graph` (always via the exact ``square`` lowering —
+    the partitioner wants dedup'd CSR rows)."""
+    if model not in MODELS:
+        raise ValueError(f"unknown coloring model {model!r}; "
+                         f"choose from {MODELS}")
+    if isinstance(g, BipartiteGraph):
+        if model != "pd2":
+            raise ValueError(f"BipartiteGraph only supports model='pd2' "
+                             f"(got model={model!r})")
+        return partial_square(g, side)
+    if not isinstance(g, Graph):
+        raise TypeError(f"expected Graph/BipartiteGraph, "
+                        f"got {type(g).__name__}")
+    if model == "pd2":
+        raise ValueError("model='pd2' needs a BipartiteGraph")
+    return g if model == "d1" else square(g)

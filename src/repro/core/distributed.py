@@ -38,6 +38,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from ..jax_compat import pvary, set_mesh, shard_map
 
+from .distance2 import constraint_host_graph
 from .engine import (EngineSpec, SweepSpec, edge_slots, fixpoint_sweep,
                      get_backend, lockstep_offsets)
 from .graph import Graph
@@ -220,19 +221,31 @@ def build_distributed_coloring(mesh: Mesh, verts_local: int, edges_local: int,
     return jax.jit(run)
 
 
-def color_distributed(graph: Graph, mesh: Mesh, local_concurrency: int = 1,
+def color_distributed(graph, mesh: Mesh, local_concurrency: int = 1,
                       max_rounds: int = 64, engine: EngineSpec = "sort",
-                      color_bound: int = 0):
-    """End-to-end: partition on host, color on the mesh, return colors [V].
+                      color_bound: int = 0, model: str = "d1"):
+    """End-to-end: partition on host, color on the mesh, return colors [V]
+    (``[num_left]`` under ``model="pd2"``).
+
+    ``model`` selects the coloring semantics ("d1" | "d2" | "pd2", the
+    latter taking a :class:`repro.core.graph.BipartiteGraph`): the host
+    graph is lowered to its constraint graph (repro.core.distance2) and the
+    BSP machinery runs on that unchanged. The boundary exchange widens to
+    two-hop halos *structurally*: the per-round wire already gathers the
+    full packed color vector, a superset of any halo, so D2's wider stencil
+    changes only which gathered entries the (now two-hop) local slab edges
+    read — no new collective, no second exchange (DESIGN.md §Models).
 
     ``color_bound`` optionally caps the table-backend color capacity below
     the provable Delta+1 bound (greedy on the paper's graphs uses <= 143
     colors while Delta reaches 10^4+ on skewed R-MAT, so the provable bound
-    wastes Theta(V*Delta) table memory per sweep). It is a caller-asserted
-    bound: colors at or above it lose their forbids silently, so only cap
-    when the chromatic behavior of the graph family is known. This is also
-    what makes the dry-run's ``ColoringConfig.color_bound`` program
-    reproducible here at runtime."""
+    wastes Theta(V*Delta) table memory per sweep; under ``model="d2"``
+    Delta is the even larger *squared-graph* degree). It is a
+    caller-asserted bound: colors at or above it lose their forbids
+    silently, so only cap when the chromatic behavior of the graph family
+    is known. This is also what makes the dry-run's
+    ``ColoringConfig.color_bound`` program reproducible here at runtime."""
+    graph = constraint_host_graph(graph, model)
     D = int(np.prod(mesh.devices.shape))
     lsrc, ldst, Vl = partition_graph(graph, D)
     max_colors = graph.max_degree() + 1

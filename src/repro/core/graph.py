@@ -1,9 +1,14 @@
 """Graph containers for the coloring engine.
 
-Two representations:
+Three representations:
 
 * :class:`Graph` — host-side (numpy) CSR + directed edge list. Construction,
   dedup, symmetrization, stats live here.
+* :class:`BipartiteGraph` — host-side two-sided CSR (left->right and
+  right->left). The input structure of *partial distance-2* coloring
+  (``model="pd2"``): Jacobian compression colors one vertex class of the
+  row/column bipartite graph (Taş et al., arXiv:1701.02628). Lowered into
+  the engine's one-sided constraint graph by ``repro.core.distance2``.
 * :class:`DeviceGraph` — fixed-shape jnp arrays consumed by the JAX coloring
   algorithms. Layout-aware: always carries the directed edge list, and via
   ``Graph.to_device(layout=...)`` optionally the CSR arrays
@@ -211,6 +216,81 @@ class Graph:
         ok = pos < d_max
         ell[src[ok], pos[ok]] = dst[ok]
         return ell, deg.astype(np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class BipartiteGraph:
+    """Host-side bipartite graph: ``num_left`` x ``num_right`` vertices with
+    edges only across the classes, stored as CSR in both directions.
+
+    This is the structure partial distance-2 coloring runs on: coloring the
+    *left* class so that no two left vertices sharing a right neighbor get
+    the same color (equivalently: distance-1 coloring of the left one-mode
+    projection). ``repro.core.distance2.pd2_device_graph`` lowers it into
+    the engine's edge space; :func:`repro.core.greedy_ref.greedy_color_pd2`
+    is the serial oracle.
+    """
+
+    num_left: int
+    num_right: int
+    l2r_ptr: np.ndarray  # [L+1] int64; row r of left vertex v
+    l2r_idx: np.ndarray  # [E]   int32 right ids, sorted per row
+    r2l_ptr: np.ndarray  # [R+1] int64
+    r2l_idx: np.ndarray  # [E]   int32 left ids, sorted per row
+
+    @staticmethod
+    def from_edges(num_left: int, num_right: int,
+                   edges: np.ndarray) -> "BipartiteGraph":
+        """Build from an [M, 2] array of (left, right) pairs; duplicates are
+        dropped (no self-loop concept: the classes are disjoint)."""
+        edges = np.asarray(edges)
+        if edges.size == 0:
+            lv = np.zeros(0, np.int32)
+            rv = np.zeros(0, np.int32)
+        else:
+            lv = edges[:, 0].astype(np.int32)
+            rv = edges[:, 1].astype(np.int32)
+        if lv.size and (lv.min() < 0 or lv.max() >= num_left
+                        or rv.min() < 0 or rv.max() >= num_right):
+            raise ValueError("bipartite edge endpoint out of range")
+
+        def _csr(src, dst, n_src):
+            order = np.lexsort((dst, src))
+            s, d = src[order], dst[order]
+            if s.size:
+                first = np.empty(s.shape, np.bool_)
+                first[0] = True
+                np.logical_or(s[1:] != s[:-1], d[1:] != d[:-1], out=first[1:])
+                s, d = s[first], d[first]
+            ptr = np.zeros(n_src + 1, np.int64)
+            np.cumsum(np.bincount(s, minlength=n_src), out=ptr[1:])
+            return ptr, d.astype(np.int32)
+
+        l2r_ptr, l2r_idx = _csr(lv, rv, num_left)
+        r2l_ptr, r2l_idx = _csr(rv, lv, num_right)
+        return BipartiteGraph(num_left, num_right,
+                              l2r_ptr, l2r_idx, r2l_ptr, r2l_idx)
+
+    # ---------------------------------------------------------------- stats
+    @property
+    def num_edges(self) -> int:
+        return int(self.l2r_idx.shape[0])
+
+    def left_degrees(self) -> np.ndarray:
+        return np.diff(self.l2r_ptr).astype(np.int64)
+
+    def right_degrees(self) -> np.ndarray:
+        return np.diff(self.r2l_ptr).astype(np.int64)
+
+    def stats(self) -> dict:
+        ld, rd = self.left_degrees(), self.right_degrees()
+        return {
+            "num_left": self.num_left,
+            "num_right": self.num_right,
+            "num_edges": self.num_edges,
+            "max_left_degree": int(ld.max()) if ld.size else 0,
+            "max_right_degree": int(rd.max()) if rd.size else 0,
+        }
 
 
 @dataclasses.dataclass(frozen=True)

@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from .distance2 import as_constraint_graph
 from .engine import (EngineSpec, SweepSpec, fixpoint_sweep, get_backend,
                      lockstep_offsets, speculation_conflicts)
 from .graph import DeviceGraph
@@ -129,14 +130,27 @@ def _iterative_impl(g: DeviceGraph, *, concurrency: int, max_rounds: int,
 
 
 def color_iterative(
-    g: DeviceGraph,
+    g,
     concurrency: int = 64,
     max_rounds: int = 64,
     max_sweeps: int = 4096,
     engine: EngineSpec = "sort",
     color_bound: int = 0,
+    model: str = "d1",
 ) -> ColoringResult:
     """Run ITERATIVE with ``concurrency`` lockstep virtual threads.
+
+    ``g`` is a :class:`DeviceGraph` (model="d1" only), or a host
+    :class:`repro.core.graph.Graph` / ``BipartiteGraph`` which is lowered
+    per ``model``:
+
+    * ``model="d1"``  distance-1 (adjacent vertices differ) — the default;
+    * ``model="d2"``  distance-2 (two-hop pairs differ too; Graph input);
+    * ``model="pd2"`` bipartite partial distance-2 (BipartiteGraph input;
+      colors the left class).
+
+    The speculation/conflict machinery is model-agnostic: richer models are
+    purely a different constraint edge space (repro.core.distance2).
 
     ``engine`` selects the first-fit inner loop by name (``"sort"``,
     ``"bitmap"``, ``"ell_pallas"``) or takes a
@@ -144,9 +158,11 @@ def color_iterative(
     ``color_bound`` optionally caps the table backends' color capacity
     below the provable Delta+1 bound (a caller-asserted bound — colors at
     or above it lose their forbids silently; see color_distributed)."""
+    backend = get_backend(engine)
+    g = as_constraint_graph(g, model, needs_ell=backend.needs_ell)
     colors, rnd, conf_hist, sweep_hist, left = _iterative_impl(
         g, concurrency=int(concurrency), max_rounds=max_rounds,
-        max_sweeps=max_sweeps, backend=get_backend(engine),
+        max_sweeps=max_sweeps, backend=backend,
         color_bound=int(color_bound),
     )
     if bool(left):

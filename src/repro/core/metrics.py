@@ -1,10 +1,11 @@
-"""Coloring validity / quality metrics (host + device variants)."""
+"""Coloring validity / quality metrics (host + device variants), for every
+coloring model: distance-1, distance-2, and bipartite partial distance-2."""
 from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
 
-from .graph import Graph, DeviceGraph
+from .graph import BipartiteGraph, Graph, DeviceGraph
 
 
 def validate_coloring(graph: Graph, colors: np.ndarray) -> bool:
@@ -25,6 +26,56 @@ def count_conflicts(graph: Graph, colors: np.ndarray) -> int:
 def num_colors(colors) -> int:
     colors = np.asarray(colors)
     return int(colors.max()) if colors.size else 0
+
+
+# ------------------------------------------------------------- D2 / PD2
+def validate_d2_coloring(graph: Graph, colors: np.ndarray) -> bool:
+    """True iff ``colors`` is a valid *distance-2* coloring: every vertex
+    colored and no two vertices within two hops share a color. Checked on
+    the wedge multiset directly (no G² materialization)."""
+    from .distance2 import d2_pairs  # deferred: metrics stays light to import
+    colors = np.asarray(colors)
+    if colors.shape[0] < graph.num_vertices or (colors[: graph.num_vertices] <= 0).any():
+        return False
+    fsrc, fdst, _ = d2_pairs(graph)
+    cpad = np.concatenate([colors[: graph.num_vertices], [0]])
+    live = fsrc < graph.num_vertices
+    return not bool((cpad[fsrc[live]] == cpad[fdst[live]]).any())
+
+
+def count_d2_conflicts(graph: Graph, colors: np.ndarray) -> int:
+    """Number of *distinct* unordered distance-<=2 pairs sharing a color
+    (the D2 analogue of :func:`count_conflicts`)."""
+    from .distance2 import square
+    return count_conflicts(square(graph), np.asarray(colors))
+
+
+def validate_pd2_coloring(bg: BipartiteGraph, colors: np.ndarray,
+                          side: str = "left") -> bool:
+    """True iff ``colors`` (one entry per ``side`` vertex) is a valid
+    partial distance-2 coloring: every ``side`` vertex colored, and the
+    neighbors of each opposite-class vertex have pairwise-distinct colors."""
+    n = bg.num_left if side == "left" else bg.num_right
+    ptr, idx = ((bg.r2l_ptr, bg.r2l_idx) if side == "left"
+                else (bg.l2r_ptr, bg.l2r_idx))
+    colors = np.asarray(colors)
+    if colors.shape[0] < n or (colors[:n] <= 0).any():
+        return False
+    if not idx.size:
+        return True
+    rows = np.repeat(np.arange(ptr.shape[0] - 1), np.diff(ptr))
+    vals = colors[idx]
+    order = np.lexsort((vals, rows))
+    r, v = rows[order], vals[order]
+    return not bool(((r[1:] == r[:-1]) & (v[1:] == v[:-1])).any())
+
+
+def count_pd2_conflicts(bg: BipartiteGraph, colors: np.ndarray,
+                        side: str = "left") -> int:
+    """Number of distinct same-class pairs that share a neighbor AND a
+    color — the PD2 analogue of :func:`count_conflicts`."""
+    from .distance2 import partial_square
+    return count_conflicts(partial_square(bg, side), np.asarray(colors))
 
 
 def device_conflict_edges(g: DeviceGraph, colors: jnp.ndarray) -> jnp.ndarray:

@@ -1,6 +1,13 @@
 """Vectorized segmented first-fit ("mex") — the TPU-native replacement for the
 paper's ``forbiddenColors`` stamped array + linear scan (Alg. 1, lines 5-6).
 
+This is the computational core of the ``"sort"`` :class:`~repro.core.engine.
+MexBackend` (the registry's layout-free default); the other registered
+backends (``"bitmap"``, ``"ell_pallas"``) compute the same function through
+different formulations — see ``repro.core.engine`` for the registry and
+DESIGN.md §Engine for the parity contract. Drivers never call this module
+directly: they go through ``MexBackend.bind(...)``'s returned mex closure.
+
 Given a multiset of (vertex, forbidden-color) pairs, compute per vertex the
 minimum *positive* integer not present. The trick: lexicographically sort the
 pairs (two-key ``lax.sort`` — no int64 composite keys, TPU-friendly) and emit
@@ -10,7 +17,7 @@ vertex, or skips past ``c+1``); the segment-min of candidates is the mex.
 Callers must guarantee every live vertex contributes at least one entry; the
 canonical way is to append a synthetic ``(v, 0)`` pair per vertex (color 0 ==
 "uncolored" never collides with real colors >= 1 and seeds the candidate
-``1``).
+``1``) — ``SortMexBackend.bind`` does exactly this.
 """
 from __future__ import annotations
 

@@ -3,9 +3,15 @@
 firstfit — bitmask first-fit over ELL neighbor-color slabs (Alg. 1 lines 5-6)
 conflict — edge-parallel conflict detection (Alg. 2 line 13)
 
-The kernels plug into the coloring drivers through the mex-backend registry
-(``repro.core.engine``, ``engine="ell_pallas"``) rather than hand-wired
-closures.
+The kernels reach the coloring drivers exclusively through the
+:class:`~repro.core.engine.MexBackend` registry: ``EllPallasMexBackend``
+(``engine="ell_pallas"``) binds :func:`firstfit` to a graph's ELL geometry
+(``Graph.to_device(layout="ell")``, or device-side ``engine.edge_slots``
+under the distributed driver) and scatters each round's ``SweepSpec``
+contributions into the [V, D] slab the kernel consumes. Drivers never
+hand-wire kernel closures; registering a different kernel is a new
+``MexBackend`` subclass (DESIGN.md §Engine). Off-TPU the kernels run in
+Pallas interpret mode (``ops.INTERPRET``).
 """
 from .firstfit import firstfit
 from .conflict import conflict_mask

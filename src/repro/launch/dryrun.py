@@ -155,6 +155,7 @@ def lower_cell(arch: str, shape_name: str, mesh, rules=DEFAULT_RULES,
 def lower_coloring(mesh):
     """The paper's own workload on the production mesh (scale-24 RMAT)."""
     from repro.configs.rmat_coloring import get_config as get_col
+    from repro.core.distance2 import MODELS
     from repro.core.distributed import build_distributed_coloring
     from repro.core.engine import get_backend
     ccfg = get_col()
@@ -164,9 +165,16 @@ def lower_coloring(mesh):
             f"{ccfg.engine!r} engine needs a real host graph for its ELL "
             "width — use engine='sort' or 'bitmap' here (ELL engines run "
             "via color_distributed)")
+    if ccfg.model not in MODELS:
+        raise ValueError(f"unknown coloring model {ccfg.model!r}")
     D = int(np.prod(mesh.devices.shape))
     v = 1 << ccfg.dryrun_scale
     e2 = 2 * ccfg.edge_factor * v
+    if ccfg.model != "d1":
+        # d2/pd2 color the squared constraint graph: |E(G2)| is bounded by
+        # the wedge count ~ avg_degree x |directed edges| (distance2.py) —
+        # the slab widens accordingly, everything else is shape-identical
+        e2 *= 2 * ccfg.edge_factor
     vl = -(-v // D)
     el = int(e2 / D * 1.35)  # slab padding headroom for R-MAT skew
     fn = build_distributed_coloring(mesh, vl, el, ccfg.local_concurrency,

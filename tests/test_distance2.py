@@ -1,0 +1,216 @@
+"""Coloring-model layer tests: distance-2 and bipartite partial distance-2
+through the engine (repro.core.distance2).
+
+The invariants mirror the distance-1 suite one level up the model stack:
+validity against the serial D2/PD2 oracles, DATAFLOW == serial oracle
+exactly, backend parity (sort == bitmap bit-identically) under
+``model="d2"``, and wedge/square lowering-strategy parity.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (BipartiteGraph, Graph, rmat, greedy_color,
+                        greedy_color_d2, greedy_color_pd2, color_iterative,
+                        color_dataflow, validate_coloring,
+                        validate_d2_coloring, validate_pd2_coloring,
+                        count_d2_conflicts, count_pd2_conflicts,
+                        square, partial_square)
+from repro.core.distance2 import (as_constraint_graph, d2_device_graph,
+                                  d2_pairs, pd2_device_graph, wedge_count)
+
+GRAPHS = ["RMAT-ER", "RMAT-G", "RMAT-B"]
+
+
+def _graph(name, scale=8, seed=1):
+    return rmat.paper_graph(name, scale=scale, seed=seed)
+
+
+def _bipartite(L=96, R=64, m=500, seed=0):
+    rng = np.random.default_rng(seed)
+    edges = np.stack([rng.integers(0, L, m), rng.integers(0, R, m)], 1)
+    return BipartiteGraph.from_edges(L, R, edges)
+
+
+# ----------------------------------------------------------------- lowering
+@pytest.mark.parametrize("name", GRAPHS)
+def test_square_is_distance2_closure(name):
+    """G2's edges are exactly the distance-1 and distance-2 pairs."""
+    g = _graph(name, scale=7)
+    g2 = square(g)
+    # dense oracle: A + A^2 (off-diagonal, boolean)
+    V = g.num_vertices
+    A = np.zeros((V, V), bool)
+    src, dst = g.directed_edges()
+    A[src, dst] = True
+    want = A | (A.astype(np.int64) @ A.astype(np.int64) > 0)
+    np.fill_diagonal(want, False)
+    got = np.zeros_like(want)
+    s2, d2 = g2.directed_edges()
+    got[s2, d2] = True
+    np.testing.assert_array_equal(got, want)
+
+
+def test_d2_pairs_matches_square_pair_set():
+    """The wedge multiset covers exactly G2's directed pair set (duplicates
+    and inert-masked self wedges aside)."""
+    g = _graph("RMAT-G", scale=7)
+    fsrc, fdst, live = d2_pairs(g)
+    keep = fsrc < g.num_vertices
+    assert int(keep.sum()) == live
+    got = set(zip(fsrc[keep].tolist(), fdst[keep].tolist()))
+    s2, d2 = square(g).directed_edges()
+    assert got == set(zip(s2.tolist(), d2.tolist()))
+
+
+def test_wedge_count_matches_multiset():
+    g = _graph("RMAT-B", scale=7)
+    _fsrc, _fdst, _live = d2_pairs(g)
+    # total emitted = 2E (distance-1 heads) + W (wedges, incl. masked)
+    assert _fsrc.shape[0] == g.num_directed_edges + wedge_count(g)
+
+
+def test_as_constraint_graph_input_validation():
+    g = _graph("RMAT-ER", scale=7)
+    bg = _bipartite()
+    with pytest.raises(ValueError, match="needs the host graph"):
+        as_constraint_graph(g.to_device(), "d2")
+    with pytest.raises(ValueError, match="BipartiteGraph"):
+        as_constraint_graph(g, "pd2")
+    with pytest.raises(ValueError, match="pd2"):
+        as_constraint_graph(bg, "d1")
+    with pytest.raises(ValueError, match="unknown coloring model"):
+        as_constraint_graph(g, "d3")
+    with pytest.raises(ValueError, match="wedge"):
+        d2_device_graph(g, strategy="wedge", layout=("edges", "ell"))
+
+
+# ------------------------------------------------------------ D2 validity
+@pytest.mark.parametrize("name", GRAPHS)
+def test_d2_oracle_valid(name):
+    g = _graph(name)
+    colors = greedy_color_d2(g)
+    assert validate_d2_coloring(g, colors)
+    assert count_d2_conflicts(g, colors) == 0
+    # D2 coloring is a (usually much) finer partition than D1
+    assert colors.max() >= greedy_color(g).max()
+
+
+@pytest.mark.parametrize("name", GRAPHS)
+def test_d2_oracle_equals_d1_greedy_on_square(name):
+    """greedy_color_d2(G) == greedy_color(G2): the model layer's core
+    identity."""
+    g = _graph(name)
+    np.testing.assert_array_equal(greedy_color_d2(g), greedy_color(square(g)))
+
+
+@pytest.mark.parametrize("name", GRAPHS)
+@pytest.mark.parametrize("engine", ["sort", "bitmap"])
+def test_iterative_d2_valid(name, engine):
+    g = _graph(name)
+    res = color_iterative(g, concurrency=16, engine=engine, model="d2",
+                          max_rounds=256)
+    assert validate_d2_coloring(g, np.asarray(res.colors))
+    # a D2 coloring is in particular a valid D1 coloring
+    assert validate_coloring(g, np.asarray(res.colors))
+
+
+@pytest.mark.parametrize("name", GRAPHS)
+def test_dataflow_d2_equals_serial_oracle(name):
+    g = _graph(name)
+    res = color_dataflow(g, model="d2")
+    np.testing.assert_array_equal(np.asarray(res.colors), greedy_color_d2(g))
+
+
+@pytest.mark.parametrize("name", GRAPHS)
+def test_d2_backend_parity(name):
+    """sort and bitmap are bit-identical under model="d2": same colors,
+    rounds, and per-round conflict/sweep histories."""
+    g = _graph(name)
+    a = color_iterative(g, concurrency=16, engine="sort", model="d2",
+                        max_rounds=256)
+    b = color_iterative(g, concurrency=16, engine="bitmap", model="d2",
+                        max_rounds=256)
+    np.testing.assert_array_equal(np.asarray(a.colors), np.asarray(b.colors))
+    assert a.rounds == b.rounds
+    np.testing.assert_array_equal(np.asarray(a.conflicts_per_round),
+                                  np.asarray(b.conflicts_per_round))
+    np.testing.assert_array_equal(np.asarray(a.sweeps_per_round),
+                                  np.asarray(b.sweeps_per_round))
+
+
+def test_d2_strategy_parity():
+    """wedge and square lowerings carry the same constraint set, so the
+    driver produces bit-identical results under either."""
+    g = _graph("RMAT-G")
+    a = color_iterative(d2_device_graph(g, strategy="wedge"), concurrency=16,
+                        max_rounds=256)
+    b = color_iterative(d2_device_graph(g, strategy="square"), concurrency=16,
+                        max_rounds=256)
+    np.testing.assert_array_equal(np.asarray(a.colors), np.asarray(b.colors))
+    assert a.rounds == b.rounds
+    np.testing.assert_array_equal(np.asarray(a.conflicts_per_round),
+                                  np.asarray(b.conflicts_per_round))
+
+
+def test_d2_ell_backend():
+    """model="d2" with the Pallas ELL backend: the auto strategy routes
+    through the square lowering (deduped rows) and stays valid."""
+    g = _graph("RMAT-ER", scale=7)
+    res = color_iterative(g, concurrency=8, engine="ell_pallas", model="d2")
+    assert validate_d2_coloring(g, np.asarray(res.colors))
+
+
+# ----------------------------------------------------------------- PD2
+def test_bipartite_graph_construction():
+    bg = BipartiteGraph.from_edges(4, 3, np.array([[0, 0], [0, 0], [1, 0],
+                                                   [3, 2], [1, 1]]))
+    assert bg.num_edges == 4  # duplicate (0,0) dropped
+    assert bg.left_degrees().tolist() == [1, 2, 0, 1]
+    assert bg.right_degrees().tolist() == [2, 1, 1]
+    with pytest.raises(ValueError, match="out of range"):
+        BipartiteGraph.from_edges(2, 2, np.array([[0, 5]]))
+
+
+def test_pd2_oracle_valid():
+    bg = _bipartite()
+    colors = greedy_color_pd2(bg)
+    assert validate_pd2_coloring(bg, colors)
+    assert count_pd2_conflicts(bg, colors) == 0
+    # and the identity: PD2 == D1 greedy on the one-mode projection
+    np.testing.assert_array_equal(colors, greedy_color(partial_square(bg)))
+
+
+@pytest.mark.parametrize("engine", ["sort", "bitmap"])
+def test_iterative_pd2_valid(engine):
+    bg = _bipartite()
+    res = color_iterative(bg, concurrency=16, engine=engine, model="pd2",
+                          max_rounds=256)
+    assert validate_pd2_coloring(bg, np.asarray(res.colors))
+
+
+def test_dataflow_pd2_equals_serial_oracle():
+    bg = _bipartite()
+    res = color_dataflow(bg, model="pd2")
+    np.testing.assert_array_equal(np.asarray(res.colors),
+                                  greedy_color_pd2(bg))
+
+
+def test_pd2_right_side():
+    """side="right" colors the other class (column- vs row-compression)."""
+    bg = _bipartite()
+    res = color_iterative(pd2_device_graph(bg, side="right"), concurrency=8,
+                          max_rounds=256)
+    colors = np.asarray(res.colors)
+    assert colors.shape[0] == bg.num_right
+    assert validate_pd2_coloring(bg, colors, side="right")
+
+
+def test_pd2_isolated_and_empty():
+    bg = BipartiteGraph.from_edges(5, 3, np.zeros((0, 2), np.int64))
+    assert np.all(greedy_color_pd2(bg) == 1)
+    res = color_iterative(bg, concurrency=4, model="pd2")
+    assert np.all(np.asarray(res.colors) == 1)
+
+
+# hypothesis property tests live in tests/test_property.py (they skip as a
+# module when hypothesis is absent, so they can't share this file)

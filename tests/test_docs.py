@@ -1,0 +1,26 @@
+"""Docs-rot guard: the README's ``python`` code blocks must run verbatim.
+
+Thin pytest wrapper around tools/check_doc_snippets.py (the same entry the
+CI docs lane uses), so the tier-1 gate catches a stale quickstart too.
+"""
+import os
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tools"))
+
+from check_doc_snippets import run_file  # noqa: E402
+
+
+@pytest.mark.parametrize("doc", ["README.md"])
+def test_doc_snippets_run(doc):
+    path = os.path.join(REPO, doc)
+    assert os.path.exists(path), f"{doc} is missing"
+    old = os.getcwd()
+    os.chdir(REPO)
+    try:
+        assert run_file(path) == 0
+    finally:
+        os.chdir(old)

@@ -9,8 +9,9 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (Graph, greedy_color, color_iterative, color_dataflow,
-                        validate_coloring)
+from repro.core import (BipartiteGraph, Graph, greedy_color, color_iterative,
+                        color_dataflow, validate_coloring,
+                        validate_pd2_coloring)
 from repro.core.mex import segment_mex
 
 import jax.numpy as jnp
@@ -65,6 +66,37 @@ def test_segment_mex_matches_python(pairs):
         while mex in present:
             mex += 1
         assert got[vid] == mex
+
+
+@settings(max_examples=20, deadline=None)
+@given(random_graphs(max_v=24, max_e=60), st.sampled_from(["sort", "bitmap"]))
+def test_d2_no_two_hop_pair_shares_a_color(g, engine):
+    """For ANY graph: after model="d2" coloring, no pair of vertices at
+    distance <= 2 shares a color (checked against the dense two-hop
+    closure, independently of the wedge lowering under test)."""
+    res = color_iterative(g, concurrency=4, engine=engine, model="d2",
+                          max_rounds=512)
+    colors = np.asarray(res.colors)
+    V = g.num_vertices
+    A = np.zeros((V, V), bool)
+    src, dst = g.directed_edges()
+    A[src, dst] = True
+    reach2 = A | (A.astype(np.int64) @ A.astype(np.int64) > 0)
+    np.fill_diagonal(reach2, False)
+    u, v = np.nonzero(reach2)
+    assert (colors > 0).all()
+    assert not np.any(colors[u] == colors[v])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 12), st.integers(1, 8), st.integers(0, 40),
+       st.integers(0, 2 ** 31 - 1))
+def test_pd2_no_shared_neighbor_pair_shares_a_color(L, R, m, seed):
+    rng = np.random.default_rng(seed)
+    edges = np.stack([rng.integers(0, L, m), rng.integers(0, R, m)], 1)
+    bg = BipartiteGraph.from_edges(L, R, edges)
+    res = color_dataflow(bg, model="pd2")
+    assert validate_pd2_coloring(bg, np.asarray(res.colors))
 
 
 @settings(max_examples=20, deadline=None)

@@ -1,0 +1,73 @@
+"""Execute the fenced ``python`` code blocks of markdown docs so documented
+snippets can never rot (the CI docs lane; also wrapped by
+tests/test_docs.py).
+
+Rules:
+* only fences whose info string is exactly ``python`` run; ``bash``/other
+  fences and fences tagged e.g. ``python-norun`` are skipped;
+* all blocks of one file execute **in order in one shared namespace**, so a
+  doc can build up a running example across prose;
+* any exception (including a failed ``assert``) exits non-zero with the
+  offending file, block index and source line.
+
+Usage:
+    PYTHONPATH=src python tools/check_doc_snippets.py README.md [more.md ...]
+"""
+from __future__ import annotations
+
+import re
+import sys
+import traceback
+
+FENCE = re.compile(r"^```(\S*)\s*$")
+
+
+def python_blocks(text: str):
+    """Yield (start_line, source) for each ```python fenced block."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE.match(lines[i])
+        if m:
+            info, start = m.group(1), i + 1
+            block = []
+            i += 1
+            while i < len(lines) and not FENCE.match(lines[i]):
+                block.append(lines[i])
+                i += 1
+            if info == "python":
+                yield start + 1, "\n".join(block)
+        i += 1
+
+
+def run_file(path: str) -> int:
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    ns = {"__name__": f"docsnippets:{path}"}
+    n = 0
+    for lineno, src in python_blocks(text):
+        n += 1
+        try:
+            code = compile(src, f"{path}:block{n}(line {lineno})", "exec")
+            exec(code, ns)  # noqa: S102 — executing our own docs is the point
+        except Exception:
+            print(f"FAIL {path} block {n} (markdown line {lineno}):",
+                  file=sys.stderr)
+            traceback.print_exc()
+            return 1
+        print(f"ok   {path} block {n} (markdown line {lineno})")
+    if n == 0:
+        print(f"WARN {path}: no ```python blocks found", file=sys.stderr)
+    return 0
+
+
+def main(argv) -> int:
+    paths = argv[1:] or ["README.md"]
+    rc = 0
+    for p in paths:
+        rc |= run_file(p)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
