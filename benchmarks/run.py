@@ -20,6 +20,8 @@ override, ``engine_compare`` additionally honors ``--ell``):
   d2_compare                | distance-2 + bipartite partial-  | 9
                             | D2 models vs serial D2/PD2       |
                             | oracles, sort/bitmap parity      |
+  plan_throughput           | graphs/s: per-call drivers vs    | 11
+                            | compile_plan reuse vs plan.map   |
   kernel_firstfit           | Pallas firstfit vs sort engine   | 13
   comm_schedule             | coloring-scheduled all-to-all    | (none)
 
@@ -228,6 +230,63 @@ def d2_compare(scale=9):
          f"rounds={res.rounds};conflicts={res.total_conflicts}")
 
 
+def plan_throughput(scale=11, batch=8):
+    """Compile-once serving throughput (the ROADMAP's color-many path):
+    graphs/second of (a) the per-call legacy drivers — which retrace for
+    every distinct (edge count, max degree) — vs (b) ``compile_plan`` +
+    reuse, where every same-bucket graph rides ONE compiled program, vs
+    (c) ``plan.map``, one vmapped program for the whole batch. Reported
+    per engine and strategy on the three R-MAT families; all three paths
+    must produce identical colors per graph (asserted)."""
+    from repro.core import ColoringSpec, PlanShape, compile_plan
+    from repro.core.graph import pad_bucket
+    print(f"\n== plan throughput: per-call vs plan-reuse vs plan.map "
+          f"(scale {scale}, batch {batch}) ==")
+    for name in GRAPHS:
+        family = [rmat.paper_graph(name, scale=scale, seed=s)
+                  for s in range(batch)]
+        shape = PlanShape(
+            num_vertices=family[0].num_vertices,
+            padded_edges=pad_bucket(max(g.num_directed_edges
+                                        for g in family)),
+            max_degree=max(g.max_degree() for g in family))
+        for strategy in ["iterative", "dataflow"]:
+            for eng in ["sort", "bitmap"]:
+                if strategy == "iterative":
+                    def legacy(g, e=eng):
+                        return color_iterative(g, concurrency=64, engine=e)
+                else:
+                    def legacy(g, e=eng):
+                        return color_dataflow(g, engine=e)
+                t0 = time.perf_counter()
+                legacy_colors = [np.asarray(legacy(g).colors) for g in family]
+                t_call = time.perf_counter() - t0
+
+                spec = ColoringSpec(strategy=strategy, engine=eng,
+                                    concurrency=64)
+                plan = compile_plan(spec, shape)
+                plan(family[0])  # warm: the single jit trace
+                t0 = time.perf_counter()
+                reused = [plan(g) for g in family]
+                t_reuse = time.perf_counter() - t0
+
+                plan.map(family)  # warm the vmapped program
+                t0 = time.perf_counter()
+                mapped = plan.map(family)
+                t_map = time.perf_counter() - t0
+                assert plan.traces == 2, "plan reuse must not retrace"
+                for ref, a, b in zip(legacy_colors, reused, mapped):
+                    assert np.array_equal(ref, a.colors), (name, strategy, eng)
+                    assert np.array_equal(ref, b.colors), (name, strategy, eng)
+                _row(f"plan/{name}/{strategy}/{eng}", t_map / batch * 1e6,
+                     f"per_call_gps={batch / t_call:.1f};"
+                     f"reuse_gps={batch / t_reuse:.1f};"
+                     f"map_gps={batch / t_map:.1f};"
+                     f"reuse_speedup={t_call / t_reuse:.1f}x;"
+                     f"map_speedup={t_call / t_map:.1f}x;"
+                     f"colors={mapped[0].num_colors}")
+
+
 def kernel_firstfit(scale=13):
     print(f"\n== Pallas firstfit engine vs sort-mex engine (scale {scale}) ==")
     g = rmat.paper_graph("RMAT-G", scale=scale, seed=0)
@@ -266,6 +325,7 @@ FAMILIES = {
     "engine_compare":
         (lambda a, s: engine_compare(scale=s, with_ell=a.ell), 13),
     "d2_compare": (lambda a, s: d2_compare(scale=s), 9),
+    "plan_throughput": (lambda a, s: plan_throughput(scale=s), 11),
     "kernel_firstfit": (lambda a, s: kernel_firstfit(scale=s), 13),
     "comm_schedule": (lambda a, s: comm_schedule_bench(), None),
 }

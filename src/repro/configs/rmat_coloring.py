@@ -35,6 +35,27 @@ class ColoringConfig:
     # stays <= 143 colors, so 512 leaves ample headroom; D2 colorings use
     # up to ~avg_degree x more — still far below 512 at edge factor 8)
     color_bound: int = 512
+    # vertex-visit ordering (repro.core.ordering.ORDERINGS). Purely a
+    # runtime (host-relabel) knob: the dry-run lowering is ordering-
+    # invariant, since a relabeled graph has identical slab shapes.
+    ordering: str = "natural"
+
+    def to_spec(self, mesh=None):
+        """This config as a :class:`repro.core.api.ColoringSpec` for the
+        registered ``"distributed"`` strategy — the runtime counterpart of
+        the program the dry-run lowers (same engine/model/bounds), usable
+        with ``repro.core.color`` / ``compile_plan`` directly."""
+        from repro.core.api import ColoringSpec
+        return ColoringSpec(strategy="distributed", model=self.model,
+                            engine=self.engine, ordering=self.ordering,
+                            max_rounds=self.max_rounds,
+                            # the BSP local solve's sweep cap (not a config
+                            # knob): match build_distributed_coloring's
+                            # default so this spec compiles the SAME program
+                            # the dry-run lowers and the legacy shim runs
+                            max_sweeps=16384,
+                            local_concurrency=self.local_concurrency,
+                            color_bound=self.color_bound, mesh=mesh)
 
 
 def get_config() -> ColoringConfig:

@@ -2,6 +2,14 @@
 generalized to a family of coloring models behind one engine.
 
 Public API:
+  color(graph, spec)             THE front door: one-shot spec -> report
+  ColoringSpec / compile_plan /  declarative spec; compiled plan serving
+  ColoringPlan / ColoringReport  same-bucket graphs with zero retrace
+                                 (plan.map batches via vmap); one unified
+                                 result type for every strategy (api.py)
+  ColoringStrategy /             the algorithm registry: "iterative" |
+  register_strategy              "dataflow" | "distributed" ship; a new
+                                 algorithm is a subclass + one register call
   Graph / BipartiteGraph /       containers (host CSR, bipartite two-sided
   DeviceGraph                    CSR, layout-aware device arrays: edge
                                  list / CSR / ELL)
@@ -37,8 +45,15 @@ from .metrics import (validate_coloring, count_conflicts, num_colors,
                       validate_pd2_coloring, count_pd2_conflicts)
 from .distributed import color_distributed
 from .comm_schedule import schedule_transfers, CommSchedule
+from . import api
+from .api import (ColoringPlan, ColoringReport, ColoringSpec,
+                  ColoringStrategy, PlanShape, available_strategies, color,
+                  compile_plan, get_strategy, register_strategy)
 
 __all__ = [
+    "api", "color", "compile_plan", "ColoringSpec", "ColoringPlan",
+    "ColoringReport", "ColoringStrategy", "PlanShape",
+    "register_strategy", "get_strategy", "available_strategies",
     "Graph", "BipartiteGraph", "DeviceGraph", "rmat", "ordering", "engine",
     "distance2", "square", "partial_square",
     "greedy_color", "greedy_color_d2", "greedy_color_pd2",

@@ -1,0 +1,630 @@
+"""The front door: ``ColoringSpec`` -> compiled ``ColoringPlan`` -> unified
+``ColoringReport`` (DESIGN.md §API).
+
+The paper's thesis is that ONE speculate-then-resolve scheme spans radically
+different machines once the machine-specific pieces are pluggable. PR 1 made
+the *mex inner loop* pluggable (:class:`repro.core.engine.MexBackend`); this
+module does the same for the *algorithms*: the three drivers become
+registered :class:`ColoringStrategy` instances behind one declarative entry
+point, so every cross-cutting axis (engine, model, ordering, bounds) is
+threaded once — here — instead of once per driver.
+
+Three ways in, strictest first:
+
+* ``color(graph, spec)`` — one-shot: resolve the spec, run the strategy,
+  return a :class:`ColoringReport`. The ergonomic path; compiles per call
+  shape like the legacy functions.
+* ``compile_plan(spec, graph_or_shape)`` -> :class:`ColoringPlan` — the
+  compile-once, color-many path the serving roadmap needs. The plan lowers
+  the model, binds the mex backend, fixes every static shape (vertex count,
+  bucket-padded edge capacity, color capacity) and jit-specializes ONCE;
+  ``plan(graph)`` then serves **any same-bucket graph with zero retrace**
+  (:func:`repro.core.graph.pad_bucket` quantizes edge counts so "same
+  shape" is achievable in practice), and ``plan.map(graphs)`` vmaps a batch
+  through one program for throughput.
+* the legacy ``color_iterative`` / ``color_dataflow`` / ``color_distributed``
+  functions — thin back-compat shims over the same registry (bit-identical
+  results; see iterative.py / dataflow.py / distributed.py).
+
+Orderings (paper §5.1, ``repro.core.ordering.ORDERINGS``) are applied by
+relabeling the *constraint* graph before coloring and un-relabeling the
+colors on the way out — reports are **always in original vertex ids**, for
+every model (under ``d2``/``pd2`` the ordering ranks constraint-graph
+degrees, which is the quantity that matters for D2 color quality).
+
+Registering a new algorithm (Rokos-style detect-and-recolor, a distributed
+recoloring pass, ...) is a :class:`ColoringStrategy` subclass plus one
+:func:`register_strategy` call — the spec/plan/report plumbing, ordering,
+model lowering and batching come for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, NamedTuple, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .distance2 import MODELS, as_constraint_graph, constraint_host_graph
+from .engine import EngineSpec, MexBackend, get_backend
+from .graph import DeviceGraph, Graph, pad_bucket
+from .ordering import ORDERINGS
+
+_LOWERINGS = ("auto", "wedge", "square")
+
+
+# --------------------------------------------------------------------------
+# the spec
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ColoringSpec:
+    """Declarative description of a coloring run: *what* to compute and on
+    *which* machinery — everything :func:`compile_plan` needs to specialize
+    a program, and nothing data-dependent.
+
+    strategy     registered :class:`ColoringStrategy` name (or instance):
+                 ``"iterative"`` | ``"dataflow"`` | ``"distributed"``;
+    model        coloring semantics: ``"d1"`` | ``"d2"`` | ``"pd2"``
+                 (repro.core.distance2);
+    engine       first-fit mex backend name/instance (repro.core.engine);
+    ordering     vertex-visit priority, a ``repro.core.ordering.ORDERINGS``
+                 key — applied as a relabeling of the constraint graph,
+                 un-applied on the way out (reports stay in original ids);
+    ordering_seed  seed for stochastic orderings (``"random"``);
+    lowering     D2/PD2 constraint lowering: ``"auto"`` | ``"wedge"`` |
+                 ``"square"`` (distance2.py; plans always use the dedup'd
+                 square lowering so shapes are paddable);
+    side         the colored class under ``model="pd2"``;
+    concurrency  ITERATIVE's lockstep virtual-thread count;
+    max_rounds / max_sweeps / color_bound  as on the legacy drivers;
+    mesh         jax Mesh for the distributed strategy (None = 1-device);
+    local_concurrency  distributed per-device concurrency (C=1 is the
+                 classic Bozdag scheme).
+    """
+
+    strategy: Union[str, "ColoringStrategy"] = "iterative"
+    model: str = "d1"
+    engine: EngineSpec = "sort"
+    ordering: str = "natural"
+    ordering_seed: int = 0
+    lowering: str = "auto"
+    side: str = "left"
+    concurrency: int = 64
+    max_rounds: int = 64
+    max_sweeps: int = 4096
+    color_bound: int = 0
+    mesh: Optional[object] = None  # jax.sharding.Mesh; object keeps the
+    # dataclass importable without touching jax.sharding at class-def time
+    local_concurrency: int = 1
+
+    def __post_init__(self):
+        if self.model not in MODELS:
+            raise ValueError(f"unknown coloring model {self.model!r}; "
+                             f"choose from {MODELS}")
+        if self.lowering not in _LOWERINGS:
+            raise ValueError(f"unknown lowering {self.lowering!r}; "
+                             f"choose from {_LOWERINGS}")
+
+    def resolve(self) -> Tuple["ColoringStrategy", MexBackend]:
+        """Resolve the registered pieces (strategy, mex backend) by name."""
+        return get_strategy(self.strategy), get_backend(self.engine)
+
+
+# --------------------------------------------------------------------------
+# the report
+# --------------------------------------------------------------------------
+class RawColoring(NamedTuple):
+    """What every strategy returns (a pytree, so it flows through jit/vmap):
+    colors in the *strategy's* label space, per-round histories, and an
+    unconverged flag. :class:`ColoringPlan`/:func:`color` normalize it into
+    a :class:`ColoringReport` (un-relabeling, host transfer, wall time)."""
+
+    colors: jnp.ndarray               # [V] int32 >= 1
+    rounds: jnp.ndarray               # scalar int32
+    conflicts_per_round: jnp.ndarray  # [max_rounds] int32
+    sweeps_per_round: jnp.ndarray     # [max_rounds] int32
+    unconverged: jnp.ndarray          # scalar bool
+
+
+def _invert_order(order: np.ndarray) -> np.ndarray:
+    """``order[k]`` = vertex visited k-th -> ``perm[v]`` = new id of vertex
+    v (the relabel argument of :meth:`Graph.relabel`; ``colors[perm]`` is
+    the exact inverse on the way out)."""
+    perm = np.empty_like(order)
+    perm[order] = np.arange(order.shape[0], dtype=order.dtype)
+    return perm
+
+
+def _build_report(raw: "RawColoring", spec: "ColoringSpec",
+                  strategy_name: str, perm: Optional[np.ndarray],
+                  t0: float, *, batch_denom: int = 1) -> "ColoringReport":
+    """Normalize a strategy's RawColoring into the unified report: raise on
+    non-convergence, un-relabel to original vertex ids, trim histories,
+    stamp (amortized) wall time. The one place this logic lives — both the
+    one-shot :func:`color` path and :class:`ColoringPlan` route here."""
+    if bool(raw.unconverged):
+        raise RuntimeError(
+            f"{strategy_name} did not converge within "
+            f"max_rounds={spec.max_rounds} / max_sweeps={spec.max_sweeps}")
+    colors = np.asarray(raw.colors)
+    if perm is not None:
+        colors = colors[perm]  # back to original vertex ids
+    rounds = int(raw.rounds)
+    return ColoringReport(
+        colors=colors, rounds=rounds,
+        conflicts_per_round=np.asarray(raw.conflicts_per_round)[:rounds],
+        sweeps_per_round=np.asarray(raw.sweeps_per_round)[:rounds],
+        wall_time_s=(time.perf_counter() - t0) / max(1, batch_denom),
+        spec=spec)
+
+
+@dataclasses.dataclass
+class ColoringReport:
+    """The one result type every strategy produces.
+
+    ``colors`` is a host int32 array **in original vertex ids** (any
+    ``ordering`` relabeling is undone). Histories are trimmed to ``rounds``
+    entries. ``wall_time_s`` covers lowering + execution + host transfer
+    (plan-batched runs report the amortized per-graph time)."""
+
+    colors: np.ndarray
+    rounds: int
+    conflicts_per_round: np.ndarray
+    sweeps_per_round: np.ndarray
+    wall_time_s: float
+    spec: ColoringSpec
+
+    @property
+    def num_colors(self) -> int:
+        return int(self.colors.max()) if self.colors.size else 0
+
+    @property
+    def total_conflicts(self) -> int:
+        return int(self.conflicts_per_round.sum())
+
+    @property
+    def sweeps(self) -> int:
+        return int(self.sweeps_per_round.sum())
+
+    def __repr__(self) -> str:  # compact: reports get printed in loops
+        s = self.spec
+        return (f"ColoringReport(strategy={s.strategy!r}, model={s.model!r}, "
+                f"colors={self.num_colors}, rounds={self.rounds}, "
+                f"sweeps={self.sweeps}, conflicts={self.total_conflicts}, "
+                f"wall_time_s={self.wall_time_s:.4f})")
+
+
+# --------------------------------------------------------------------------
+# the strategy layer
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ColoringStrategy:
+    """Base class: a named, registered coloring algorithm.
+
+    A strategy supplies ONE thing: how to turn a constraint
+    :class:`DeviceGraph` into a :class:`RawColoring`
+    (:meth:`device_program`). The base class derives everything else —
+    one-shot execution over the legacy lowering path (:meth:`oneshot`),
+    plan compilation with a trace-counting jit wrapper (:meth:`compile`),
+    and vmapped batching (:meth:`compile_batched`). Host-level strategies
+    (the distributed BSP driver partitions on host) override
+    :meth:`compile`/:meth:`oneshot` wholesale and set ``wants = "host"``.
+    """
+
+    name = "abstract"
+    supports_map = True    # plan.map() batching via vmap
+    wants = "device"       # "device": executor consumes a DeviceGraph;
+                           # "host": executor consumes the host constraint
+                           # Graph (strategies that partition themselves)
+
+    # -- the one required hook -------------------------------------------
+    def device_program(self, spec: ColoringSpec,
+                       backend: MexBackend) -> Callable[[DeviceGraph], RawColoring]:
+        raise NotImplementedError
+
+    # -- derived machinery ------------------------------------------------
+    def oneshot(self, spec: ColoringSpec, g) -> RawColoring:
+        """Run once on ``g`` exactly as the legacy driver would: same model
+        lowering (wedge-by-default for d2/pd2), same jit cache, no padding.
+        The legacy shims and :func:`color` route through this."""
+        backend = get_backend(spec.engine)
+        dg = as_constraint_graph(g, spec.model, needs_ell=backend.needs_ell,
+                                 strategy=spec.lowering, side=spec.side)
+        return self.device_program(spec, backend)(dg)
+
+    def compile(self, spec: ColoringSpec, statics: "PlanShape",
+                trace_hook: Callable[[], None]) -> Callable:
+        """Plan-time compilation: one jitted program over the canonical
+        (bucket-padded) DeviceGraph. ``trace_hook`` runs at trace time only
+        — the plan counts traces with it, and tests assert the count stays
+        at one across same-bucket graphs."""
+        prog = self.device_program(spec, get_backend(spec.engine))
+
+        def run(dg):
+            trace_hook()
+            return prog(dg)
+
+        return jax.jit(run)
+
+    def compile_batched(self, spec: ColoringSpec, statics: "PlanShape",
+                        trace_hook: Callable[[], None]) -> Callable:
+        """The ``plan.map`` program: the same per-graph program vmapped over
+        a stacked batch of canonical DeviceGraphs."""
+        prog = self.device_program(spec, get_backend(spec.engine))
+
+        def run(dg):
+            trace_hook()
+            return prog(dg)
+
+        return jax.jit(jax.vmap(run))
+
+
+_REGISTRY: Dict[str, ColoringStrategy] = {}
+
+StrategySpec = Union[str, ColoringStrategy]
+
+
+def register_strategy(strategy: ColoringStrategy, *,
+                      overwrite: bool = False) -> ColoringStrategy:
+    """Register a strategy instance under ``strategy.name`` so every spec
+    resolves it via ``strategy="<name>"`` (mirror of
+    :func:`repro.core.engine.register_backend`)."""
+    if strategy.name in _REGISTRY and not overwrite:
+        raise ValueError(f"coloring strategy {strategy.name!r} already "
+                         "registered")
+    _REGISTRY[strategy.name] = strategy
+    return strategy
+
+
+def get_strategy(strategy: StrategySpec) -> ColoringStrategy:
+    """Resolve ``strategy`` — a registered name or an instance."""
+    if isinstance(strategy, ColoringStrategy):
+        return strategy
+    try:
+        return _REGISTRY[strategy]
+    except KeyError:
+        raise ValueError(
+            f"unknown coloring strategy {strategy!r}; registered: "
+            f"{sorted(_REGISTRY)}") from None
+
+
+def available_strategies() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# --------------------------------------------------------------------------
+# the three shipped strategies
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class IterativeStrategy(ColoringStrategy):
+    """The paper's Algorithm 2 (speculation + iteration) — iterative.py."""
+
+    name = "iterative"
+
+    def device_program(self, spec, backend):
+        from .iterative import _iterative_impl
+
+        def run(dg):
+            colors, rnd, conf, sweeps, left = _iterative_impl(
+                dg, concurrency=int(spec.concurrency),
+                max_rounds=int(spec.max_rounds),
+                max_sweeps=int(spec.max_sweeps), backend=backend,
+                color_bound=int(spec.color_bound))
+            return RawColoring(colors, rnd, conf, sweeps, left)
+
+        return run
+
+
+@dataclasses.dataclass(frozen=True)
+class DataflowStrategy(ColoringStrategy):
+    """The paper's Algorithms 3-5 as a chaotic fixpoint — dataflow.py.
+    One conflict-free speculative round; ``sweeps_per_round`` holds the
+    DAG-depth sweep count."""
+
+    name = "dataflow"
+
+    def device_program(self, spec, backend):
+        from .dataflow import _dataflow_impl
+
+        def run(dg):
+            colors, n, changed = _dataflow_impl(
+                dg, max_sweeps=int(spec.max_sweeps), backend=backend,
+                color_bound=int(spec.color_bound))
+            return RawColoring(colors, jnp.asarray(1, jnp.int32),
+                               jnp.zeros((1,), jnp.int32),
+                               jnp.reshape(n, (1,)).astype(jnp.int32),
+                               changed)
+
+        return run
+
+
+@dataclasses.dataclass(frozen=True)
+class DistributedStrategy(ColoringStrategy):
+    """The Bozdag-style BSP driver over a jax mesh — distributed.py. A host
+    strategy: it partitions the constraint graph itself, so plans hand it
+    the host graph and it manages its own (slab-shaped) jit program.
+    ``plan.map`` is unsupported (one mesh program is already the batch)."""
+
+    name = "distributed"
+    supports_map = False
+    wants = "host"
+
+    @staticmethod
+    def _mesh(spec: ColoringSpec):
+        if spec.mesh is not None:
+            return spec.mesh
+        from jax.sharding import Mesh
+        return Mesh(np.asarray(jax.devices()[:1]), ("x",))
+
+    def _build(self, spec: ColoringSpec, mesh, *, verts_local: int,
+               edges_local: int, max_colors: int, ell_width: int):
+        from .distributed import build_distributed_coloring
+        return build_distributed_coloring(
+            mesh, verts_local, edges_local,
+            local_concurrency=int(spec.local_concurrency),
+            max_rounds=int(spec.max_rounds),
+            max_sweeps=int(spec.max_sweeps),
+            engine=spec.engine, max_colors=max_colors, ell_width=ell_width)
+
+    def _raw(self, spec: ColoringSpec, num_vertices: int, colors, rounds,
+             conf, sweeps) -> RawColoring:
+        colors = np.asarray(colors).reshape(-1)[:num_vertices]
+        rounds = int(rounds)
+        conf = np.asarray(conf)
+        unconverged = bool(rounds >= int(spec.max_rounds)
+                           and rounds > 0 and conf[rounds - 1] > 0)
+        return RawColoring(colors, np.int32(rounds), conf, np.asarray(sweeps),
+                           np.bool_(unconverged))
+
+    def oneshot(self, spec: ColoringSpec, g) -> RawColoring:
+        from ..jax_compat import set_mesh
+        from .distributed import partition_graph
+        host = constraint_host_graph(g, spec.model, side=spec.side)
+        mesh = self._mesh(spec)
+        D = int(np.prod(mesh.devices.shape))
+        lsrc, ldst, Vl = partition_graph(host, D)
+        max_colors = host.max_degree() + 1
+        if spec.color_bound > 0:
+            max_colors = min(max_colors, int(spec.color_bound))
+        fn = self._build(spec, mesh, verts_local=Vl, edges_local=lsrc.shape[1],
+                         max_colors=max_colors, ell_width=host.max_degree())
+        with set_mesh(mesh):
+            colors, rounds, conf, sweeps = fn(jnp.asarray(lsrc),
+                                              jnp.asarray(ldst))
+        return self._raw(spec, host.num_vertices, colors, rounds, conf, sweeps)
+
+    def compile(self, spec: ColoringSpec, statics: "PlanShape",
+                trace_hook: Callable[[], None]) -> Callable:
+        from ..jax_compat import set_mesh
+        from .distributed import partition_graph
+        mesh = self._mesh(spec)
+        D = int(np.prod(mesh.devices.shape))
+        Vl = -(-statics.num_vertices // D)
+        # slab capacity: even-split share + R-MAT-skew headroom, bucketed —
+        # a graph whose densest partition overflows it raises at call time
+        slab = pad_bucket(int(-(-statics.padded_edges // D) * 1.35))
+        max_colors = statics.max_degree + 1
+        if spec.color_bound > 0:
+            max_colors = min(max_colors, int(spec.color_bound))
+        fn = self._build(spec, mesh, verts_local=Vl, edges_local=slab,
+                         max_colors=max_colors, ell_width=statics.max_degree)
+
+        def counted(lsrc, ldst):
+            trace_hook()
+            return fn(lsrc, ldst)
+
+        jfn = jax.jit(counted)
+
+        def executor(host: Graph) -> RawColoring:
+            lsrc, ldst, _ = partition_graph(host, D, pad_edges_to=slab)
+            with set_mesh(mesh):
+                colors, rounds, conf, sweeps = jfn(jnp.asarray(lsrc),
+                                                   jnp.asarray(ldst))
+            return self._raw(spec, statics.num_vertices, colors, rounds,
+                             conf, sweeps)
+
+        return executor
+
+
+register_strategy(IterativeStrategy())
+register_strategy(DataflowStrategy())
+register_strategy(DistributedStrategy())
+
+
+# --------------------------------------------------------------------------
+# plans
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PlanShape:
+    """The static envelope a :class:`ColoringPlan` specializes on — in
+    *constraint-graph* space (after the d2/pd2 lowering, where applicable).
+
+    num_vertices   exact vertex count every served graph must match;
+    padded_edges   directed-edge capacity (graphs pad up to it; derived
+                   shapes pass through :func:`repro.core.graph.pad_bucket`);
+    max_degree     constraint max-degree bound: sizes the table backends'
+                   color capacity and the ELL slab width. Graphs above it
+                   are rejected (a too-small table silently drops forbids).
+    """
+
+    num_vertices: int
+    padded_edges: int
+    max_degree: int
+
+
+def _plan_shape(spec: ColoringSpec, graph_or_shape) -> PlanShape:
+    if isinstance(graph_or_shape, PlanShape):
+        return graph_or_shape
+    if isinstance(graph_or_shape, DeviceGraph):
+        raise TypeError(
+            "compile_plan needs a host Graph/BipartiteGraph (plans relabel "
+            "and pad on host) or an explicit PlanShape")
+    host = constraint_host_graph(graph_or_shape, spec.model, side=spec.side)
+    return PlanShape(num_vertices=host.num_vertices,
+                     padded_edges=pad_bucket(host.num_directed_edges),
+                     max_degree=host.max_degree())
+
+
+class ColoringPlan:
+    """A compiled coloring program: spec + static shape envelope, serving
+    any same-bucket graph with zero recompilation.
+
+    ``plan(graph)`` -> :class:`ColoringReport`;
+    ``plan.map([g0, g1, ...])`` -> list of reports via ONE vmapped program
+    (strategies with ``supports_map``).
+
+    ``plan.traces`` counts jit traces of the underlying program(s) — it
+    stays at 1 (2 once ``map`` is also used) however many same-bucket
+    graphs are served; the test suite pins this.
+    """
+
+    def __init__(self, spec: ColoringSpec, graph_or_shape):
+        self.spec = spec
+        self.strategy, self._backend = spec.resolve()
+        self.statics = _plan_shape(spec, graph_or_shape)
+        if spec.ordering not in ORDERINGS:
+            raise ValueError(f"unknown ordering {spec.ordering!r}; "
+                             f"choose from {sorted(ORDERINGS)}")
+        self._traces = 0
+        self._executor = self.strategy.compile(spec, self.statics,
+                                               self._count_trace)
+        self._batched: Optional[Callable] = None
+
+    # ------------------------------------------------------------- internals
+    def _count_trace(self):
+        self._traces += 1
+
+    @property
+    def traces(self) -> int:
+        """Number of jit traces taken by this plan's program(s)."""
+        return self._traces
+
+    def _canonicalize(self, g) -> Tuple[object, Optional[np.ndarray]]:
+        """Host graph -> (canonical input, relabel perm or None).
+
+        Lowers the model (square lowering: paddable, dedup'd), applies the
+        ordering relabel, pads edges to the bucket and pins every static
+        DeviceGraph field to the plan envelope so the jit cache key is
+        constant across served graphs."""
+        spec, st = self.spec, self.statics
+        host = constraint_host_graph(g, spec.model, side=spec.side)
+        if host.num_vertices != st.num_vertices:
+            raise ValueError(
+                f"plan compiled for {st.num_vertices} vertices, got a graph "
+                f"with {host.num_vertices}; compile a new plan")
+        perm = None
+        if spec.ordering != "natural":
+            order = ORDERINGS[spec.ordering](host, spec.ordering_seed)
+            perm = _invert_order(order)
+            host = host.relabel(perm)
+        if host.num_directed_edges > st.padded_edges:
+            raise ValueError(
+                f"graph has {host.num_directed_edges} constraint edges, "
+                f"above the plan bucket {st.padded_edges}; compile a plan "
+                "from this graph (or a larger PlanShape)")
+        if host.max_degree() > st.max_degree:
+            raise ValueError(
+                f"graph max degree {host.max_degree()} exceeds the plan "
+                f"bound {st.max_degree}; compile a plan with a larger "
+                "PlanShape.max_degree (the color tables would drop forbids)")
+        if self.strategy.wants == "host":
+            return host, perm
+        layout = ("edges", "ell") if self._backend.needs_ell else "edges"
+        dg = host.to_device(layout=layout, pad_edges_to=st.padded_edges,
+                            ell_width=max(1, st.max_degree))
+        # pin the static metadata to the envelope: num_directed_edges and
+        # max_degree are pytree aux data (= jit cache key), and the impls
+        # read them only to size color tables, for which the envelope bound
+        # is exactly as correct as the per-graph value
+        dg = dataclasses.replace(dg, num_directed_edges=st.padded_edges,
+                                 max_degree=st.max_degree)
+        return dg, perm
+
+    def _finish(self, raw: RawColoring, perm: Optional[np.ndarray],
+                t0: float, *, batch_denom: int = 1) -> ColoringReport:
+        return _build_report(raw, self.spec, self.strategy.name, perm, t0,
+                             batch_denom=batch_denom)
+
+    # ------------------------------------------------------------ execution
+    def __call__(self, g) -> ColoringReport:
+        t0 = time.perf_counter()
+        canon, perm = self._canonicalize(g)
+        raw = self._executor(canon)
+        return self._finish(raw, perm, t0)
+
+    def map(self, graphs: Sequence) -> list:
+        """Color a batch of same-bucket graphs through ONE vmapped program.
+
+        Returns one :class:`ColoringReport` per graph (original vertex ids,
+        per-graph histories; ``wall_time_s`` is the batch time amortized
+        per graph)."""
+        if not self.strategy.supports_map:
+            raise NotImplementedError(
+                f"strategy {self.strategy.name!r} does not support batched "
+                "plan.map execution")
+        graphs = list(graphs)
+        if not graphs:
+            return []
+        t0 = time.perf_counter()
+        canons, perms = zip(*(self._canonicalize(g) for g in graphs))
+        if self._batched is None:
+            self._batched = self.strategy.compile_batched(
+                self.spec, self.statics, self._count_trace)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *canons)
+        raws = self._batched(stacked)
+        return [
+            self._finish(jax.tree.map(lambda x, i=i: x[i], raws), perms[i],
+                         t0, batch_denom=len(graphs))
+            for i in range(len(graphs))
+        ]
+
+
+def compile_plan(spec: ColoringSpec, graph_or_shape) -> ColoringPlan:
+    """Compile ``spec`` against a graph (or an explicit :class:`PlanShape`)
+    into a reusable :class:`ColoringPlan`.
+
+    When given a graph, the envelope is derived from its *constraint* form:
+    vertex count exact, directed-edge capacity rounded up to the
+    :func:`repro.core.graph.pad_bucket` grid, max-degree bound taken as-is.
+    Any later graph matching the envelope is served with zero retrace; pass
+    a hand-built ``PlanShape`` to leave headroom for a whole family."""
+    return ColoringPlan(spec, graph_or_shape)
+
+
+# --------------------------------------------------------------------------
+# one-shot front door
+# --------------------------------------------------------------------------
+def color(g, spec: Optional[ColoringSpec] = None, **overrides) -> ColoringReport:
+    """One-shot front door: ``color(graph, spec)`` or
+    ``color(graph, strategy="dataflow", model="d2", ...)``.
+
+    Resolves the spec against the strategy/backend registries, applies the
+    ordering (relabel in, un-relabel out — the report is in original vertex
+    ids), runs the strategy exactly as its legacy driver would, and returns
+    a :class:`ColoringReport`."""
+    spec = ColoringSpec() if spec is None else spec
+    if overrides:
+        spec = dataclasses.replace(spec, **overrides)
+    strategy = get_strategy(spec.strategy)
+    if spec.ordering not in ORDERINGS:
+        raise ValueError(f"unknown ordering {spec.ordering!r}; "
+                         f"choose from {sorted(ORDERINGS)}")
+    t0 = time.perf_counter()
+    perm = None
+    if spec.ordering != "natural":
+        if isinstance(g, DeviceGraph):
+            raise ValueError(
+                "ordering != 'natural' relabels on host: pass a Graph/"
+                "BipartiteGraph (or pre-apply repro.core.ordering.apply)")
+        host = constraint_host_graph(g, spec.model, side=spec.side)
+        perm = _invert_order(ORDERINGS[spec.ordering](host,
+                                                      spec.ordering_seed))
+        # the constraint graph IS the d1 encoding of the model
+        raw = strategy.oneshot(dataclasses.replace(spec, model="d1"),
+                               host.relabel(perm))
+    else:
+        raw = strategy.oneshot(spec, g)
+    return _build_report(raw, spec, strategy.name, perm, t0)

@@ -32,9 +32,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .distance2 import as_constraint_graph
-from .engine import (EngineSpec, SweepSpec, fixpoint_iterate, fixpoint_sweep,
-                     get_backend)
+from .engine import (EngineSpec, SweepSpec, fixpoint_iterate, fixpoint_sweep)
 from .graph import DeviceGraph
 
 
@@ -80,15 +78,21 @@ def color_dataflow(g, max_sweeps: int = 4096,
     exactly as in :func:`color_iterative`; under "d2"/"pd2" the fixpoint
     reproduces the *serial D2/PD2 greedy* in index order
     (:func:`repro.core.greedy_ref.greedy_color_d2` / ``greedy_color_pd2``),
-    since the lowering is index-preserving."""
-    backend = get_backend(engine)
-    g = as_constraint_graph(g, model, needs_ell=backend.needs_ell)
-    colors, sweeps, pending = _dataflow_impl(
-        g, max_sweeps=max_sweeps, backend=backend,
-        color_bound=int(color_bound))
-    if bool(pending):
+    since the lowering is index-preserving.
+
+    Back-compat shim over the registered ``"dataflow"``
+    :class:`repro.core.api.ColoringStrategy` — same arguments, same
+    bit-exact results, legacy :class:`DataflowResult` return. Prefer
+    ``repro.core.color(g, strategy="dataflow", ...)`` or
+    ``repro.core.compile_plan`` for compile-once reuse."""
+    from .api import ColoringSpec, get_strategy  # lazy: api imports us
+    spec = ColoringSpec(strategy="dataflow", model=model, engine=engine,
+                        max_sweeps=max_sweeps, color_bound=int(color_bound))
+    raw = get_strategy("dataflow").oneshot(spec, g)
+    if bool(raw.unconverged):
         raise RuntimeError(f"DATAFLOW did not converge in {max_sweeps} sweeps")
-    return DataflowResult(colors=colors, sweeps=int(sweeps))
+    return DataflowResult(colors=raw.colors,
+                          sweeps=int(raw.sweeps_per_round[0]))
 
 
 @functools.partial(jax.jit, static_argnames=("num_vertices", "max_iters"))

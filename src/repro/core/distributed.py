@@ -36,15 +36,15 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
-from ..jax_compat import pvary, set_mesh, shard_map
+from ..jax_compat import pvary, shard_map
 
-from .distance2 import constraint_host_graph
 from .engine import (EngineSpec, SweepSpec, edge_slots, fixpoint_sweep,
                      get_backend, lockstep_offsets)
 from .graph import Graph
 
 
-def partition_graph(graph: Graph, num_devices: int):
+def partition_graph(graph: Graph, num_devices: int,
+                    pad_edges_to: int = 0):
     """Host-side partitioning into per-device fixed-shape edge slabs.
 
     Returns (lsrc [D, El], ldst [D, El], verts_per_device). Device d owns
@@ -52,6 +52,11 @@ def partition_graph(graph: Graph, num_devices: int):
     ldst holds *global* ids (pad = Vl*D). Edges stay row-contiguous per
     device (global src order), so local ELL slots are recoverable on device
     via :func:`repro.core.engine.edge_slots`.
+
+    ``pad_edges_to`` pins the slab width El to a fixed capacity (the
+    :class:`repro.core.api.ColoringPlan` path, where every served graph
+    must produce identically-shaped slabs); a graph whose densest partition
+    exceeds it is rejected rather than truncated.
     """
     D = num_devices
     V = graph.num_vertices
@@ -61,6 +66,12 @@ def partition_graph(graph: Graph, num_devices: int):
     owner = src // Vl
     counts = np.bincount(owner, minlength=D)
     El = max(1, int(counts.max()))
+    if pad_edges_to:
+        if El > pad_edges_to:
+            raise ValueError(
+                f"densest partition holds {El} directed edges, above the "
+                f"requested slab capacity pad_edges_to={pad_edges_to}")
+        El = int(pad_edges_to)
     lsrc = np.full((D, El), Vl, np.int32)
     ldst = np.full((D, El), Vp, np.int32)
     offsets = np.zeros(D + 1, np.int64)
@@ -116,7 +127,7 @@ def _bsp_local(lsrc, ldst, *, axis_names: Tuple[str, ...], verts_local: int,
         return pvary(x, axis_names)
 
     def round_body(state):
-        colors, pending, packed_glob, rnd, conf_hist, _ = state
+        colors, pending, packed_glob, rnd, conf_hist, sweep_hist, _ = state
         # (1) decode last round's wire. ALL nonzero colors forbid — including
         # stale colors of re-pending vertices: over-forbidding never breaks
         # validity (it slightly biases re-colored vertices away from the
@@ -140,7 +151,7 @@ def _bsp_local(lsrc, ldst, *, axis_names: Tuple[str, ...], verts_local: int,
         spec = SweepSpec(key_v=jnp.where(src_pending, lsrc, Vl),
                          dyn_idx=dst_loc, dyn=precede,
                          static_c=snap_pad[ldst])
-        colors, _, _ = fixpoint_sweep(
+        colors, n_sweeps, _ = fixpoint_sweep(
             mex, spec, jnp.where(pending, 0, colors), pending,
             max_sweeps=max_sweeps, wrap=pv)
 
@@ -161,19 +172,23 @@ def _bsp_local(lsrc, ldst, *, axis_names: Tuple[str, ...], verts_local: int,
         # (5) global termination vote
         total = lax.psum(new_pending.sum(dtype=jnp.int32), axis_names)
         conf_hist = conf_hist.at[rnd].set(total)
-        return colors, new_pending, packed_glob, rnd + 1, conf_hist, total
+        # local sweep depth this round; the caller maxes across devices
+        sweep_hist = sweep_hist.at[rnd].set(n_sweeps)
+        return (colors, new_pending, packed_glob, rnd + 1, conf_hist,
+                sweep_hist, total)
 
     def cond(state):
-        _, _, _, rnd, _, total = state
+        _, _, _, rnd, _, _, total = state
         return jnp.logical_and(total > 0, rnd < max_rounds)
 
     init = (pv(jnp.zeros((Vl,), jnp.int32)), pv(jnp.ones((Vl,), jnp.bool_)),
             pv(jnp.ones((Vp,), jnp.int16)),  # all uncolored+pending
             pv(jnp.asarray(0, jnp.int32)), pv(jnp.zeros((max_rounds,), jnp.int32)),
+            pv(jnp.zeros((max_rounds,), jnp.int32)),
             jnp.asarray(1, jnp.int32))  # psum output is axis-invariant
-    colors, pending, packed_glob, rnd, conf_hist, _ = lax.while_loop(
+    colors, pending, packed_glob, rnd, conf_hist, sweep_hist, _ = lax.while_loop(
         cond, round_body, init)
-    return colors[None], rnd[None], conf_hist[None]
+    return colors[None], rnd[None], conf_hist[None], sweep_hist[None]
 
 
 def build_distributed_coloring(mesh: Mesh, verts_local: int, edges_local: int,
@@ -184,8 +199,10 @@ def build_distributed_coloring(mesh: Mesh, verts_local: int, edges_local: int,
     """Build the jitted shard_map coloring program for a mesh.
 
     Returns ``fn(lsrc [D, El], ldst [D, El]) -> (colors [D, Vl], rounds,
-    conflicts_per_round)``; inputs/outputs sharded over all mesh axes.
-    Static shapes, so the identical program serves dry-run lowering.
+    conflicts_per_round, sweeps_per_round)``; inputs/outputs sharded over
+    all mesh axes (``sweeps_per_round`` is the deepest local fixpoint across
+    devices each round). Static shapes, so the identical program serves
+    dry-run lowering.
 
     ``engine`` picks the local first-fit backend; ``max_colors`` (global
     Delta+1) sizes the bitmap/ell backends; ``ell_width`` (max degree of any
@@ -211,12 +228,13 @@ def build_distributed_coloring(mesh: Mesh, verts_local: int, edges_local: int,
     smapped = shard_map(
         body, mesh=mesh,
         in_specs=(spec_in, spec_in),
-        out_specs=(P(axis_names, None), P(axis_names), P(axis_names, None)),
+        out_specs=(P(axis_names, None), P(axis_names), P(axis_names, None),
+                   P(axis_names, None)),
     )
 
     def run(lsrc, ldst):
-        colors, rnd, conf = smapped(lsrc, ldst)
-        return colors, rnd.max(), conf.max(axis=0)
+        colors, rnd, conf, sweeps = smapped(lsrc, ldst)
+        return colors, rnd.max(), conf.max(axis=0), sweeps.max(axis=0)
 
     return jax.jit(run)
 
@@ -226,6 +244,14 @@ def color_distributed(graph, mesh: Mesh, local_concurrency: int = 1,
                       color_bound: int = 0, model: str = "d1"):
     """End-to-end: partition on host, color on the mesh, return colors [V]
     (``[num_left]`` under ``model="pd2"``).
+
+    Back-compat shim over the registered ``"distributed"``
+    :class:`repro.core.api.ColoringStrategy` (which owns the
+    partition/build/run sequence); kept for its legacy return shape
+    ``(colors, rounds, conflicts_per_round)``. Prefer
+    ``repro.core.color(graph, strategy="distributed", mesh=mesh)`` — same
+    machinery, richer :class:`repro.core.api.ColoringReport` (sweeps,
+    wall time), and ``ordering=`` support.
 
     ``model`` selects the coloring semantics ("d1" | "d2" | "pd2", the
     latter taking a :class:`repro.core.graph.BipartiteGraph`): the host
@@ -245,17 +271,11 @@ def color_distributed(graph, mesh: Mesh, local_concurrency: int = 1,
     silently, so only cap when the chromatic behavior of the graph family
     is known. This is also what makes the dry-run's
     ``ColoringConfig.color_bound`` program reproducible here at runtime."""
-    graph = constraint_host_graph(graph, model)
-    D = int(np.prod(mesh.devices.shape))
-    lsrc, ldst, Vl = partition_graph(graph, D)
-    max_colors = graph.max_degree() + 1
-    if color_bound > 0:
-        max_colors = min(max_colors, int(color_bound))
-    fn = build_distributed_coloring(mesh, Vl, lsrc.shape[1],
-                                    local_concurrency, max_rounds,
-                                    engine=engine, max_colors=max_colors,
-                                    ell_width=graph.max_degree())
-    with set_mesh(mesh):
-        colors, rounds, conf = fn(jnp.asarray(lsrc), jnp.asarray(ldst))
-    colors = np.asarray(colors).reshape(-1)[: graph.num_vertices]
-    return colors, int(rounds), np.asarray(conf)
+    from .api import ColoringSpec, get_strategy  # lazy: api imports us
+    spec = ColoringSpec(strategy="distributed", model=model, engine=engine,
+                        max_rounds=max_rounds, max_sweeps=16384,
+                        color_bound=int(color_bound), mesh=mesh,
+                        local_concurrency=local_concurrency)
+    raw = get_strategy("distributed").oneshot(spec, graph)
+    return (np.asarray(raw.colors), int(raw.rounds),
+            np.asarray(raw.conflicts_per_round))

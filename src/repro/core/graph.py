@@ -38,6 +38,24 @@ import jax.numpy as jnp
 _LAYOUTS = ("edges", "csr", "ell")
 
 
+def pad_bucket(n: int, *, min_bucket: int = 256) -> int:
+    """Round ``n`` up to the shape-bucket grid: multiples of ``2^(k-3)``
+    within ``(2^(k-1), 2^k]`` (eighth-of-an-octave steps), floored at
+    ``min_bucket``.
+
+    Padding waste stays at most 25% (typically a few percent) while the
+    number of distinct shapes per size decade stays in the tens — the
+    quantization that makes :class:`repro.core.api.ColoringPlan`'s
+    "same bucket => zero retrace" achievable for real graph families, where
+    raw edge counts almost never repeat exactly."""
+    n = int(n)
+    if n <= min_bucket:
+        return int(min_bucket)
+    k = (n - 1).bit_length()
+    step = 1 << max(k - 3, 0)
+    return -(-n // step) * step
+
+
 @dataclasses.dataclass(frozen=True)
 class Graph:
     """Host-side undirected graph in CSR form (numpy)."""

@@ -46,8 +46,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .distance2 import as_constraint_graph
-from .engine import (EngineSpec, SweepSpec, fixpoint_sweep, get_backend,
+from .engine import (EngineSpec, SweepSpec, fixpoint_sweep,
                      lockstep_offsets, speculation_conflicts)
 from .graph import DeviceGraph
 
@@ -157,16 +156,21 @@ def color_iterative(
     :class:`repro.core.engine.MexBackend` instance directly.
     ``color_bound`` optionally caps the table backends' color capacity
     below the provable Delta+1 bound (a caller-asserted bound — colors at
-    or above it lose their forbids silently; see color_distributed)."""
-    backend = get_backend(engine)
-    g = as_constraint_graph(g, model, needs_ell=backend.needs_ell)
-    colors, rnd, conf_hist, sweep_hist, left = _iterative_impl(
-        g, concurrency=int(concurrency), max_rounds=max_rounds,
-        max_sweeps=max_sweeps, backend=backend,
-        color_bound=int(color_bound),
-    )
-    if bool(left):
+    or above it lose their forbids silently; see color_distributed).
+
+    Back-compat shim over the registered ``"iterative"``
+    :class:`repro.core.api.ColoringStrategy` — same arguments, same
+    bit-exact results, legacy :class:`ColoringResult` return. Prefer
+    ``repro.core.color(g, strategy="iterative", ...)`` (unified
+    :class:`repro.core.api.ColoringReport`, ``ordering=`` support) or
+    ``repro.core.compile_plan`` for compile-once reuse."""
+    from .api import ColoringSpec, get_strategy  # lazy: api imports us
+    spec = ColoringSpec(strategy="iterative", model=model, engine=engine,
+                        concurrency=int(concurrency), max_rounds=max_rounds,
+                        max_sweeps=max_sweeps, color_bound=int(color_bound))
+    raw = get_strategy("iterative").oneshot(spec, g)
+    if bool(raw.unconverged):
         raise RuntimeError(f"ITERATIVE did not converge in {max_rounds} rounds")
-    return ColoringResult(colors=colors, rounds=int(rnd),
-                          conflicts_per_round=conf_hist,
-                          sweeps_per_round=sweep_hist)
+    return ColoringResult(colors=raw.colors, rounds=int(raw.rounds),
+                          conflicts_per_round=raw.conflicts_per_round,
+                          sweeps_per_round=raw.sweeps_per_round)

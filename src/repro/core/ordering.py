@@ -4,8 +4,16 @@ Orderings matter twice: (a) greedy color quality, (b) on cached machines,
 locality — the paper deliberately *shuffles* to kill locality (§5.1). We
 expose the standard menu; ``apply`` relabels a graph so that the parallel
 algorithms (which always process in index order) inherit the ordering.
+
+The ``ORDERINGS`` registry is the ordering namespace of
+:class:`repro.core.api.ColoringSpec`: every entry is callable as
+``fn(graph, seed) -> order`` (``order[k]`` = the vertex visited k-th), and
+the spec/plan layer applies it by relabeling the constraint graph and
+un-relabeling the resulting colors, so reports stay in original vertex ids.
 """
 from __future__ import annotations
+
+import heapq
 
 import numpy as np
 
@@ -29,14 +37,13 @@ def largest_degree_first(graph: Graph, seed: int = 0) -> np.ndarray:
 
 def smallest_degree_last(graph: Graph, seed: int = 0) -> np.ndarray:
     """Iteratively peel minimum-degree vertices; color in reverse peel order.
-    Bounds colors by degeneracy+1. O(E) bucket implementation."""
+    Bounds colors by degeneracy+1. Lazy-deletion binary heap, O(E log V):
+    decrease-key is a fresh push, and popped entries whose recorded degree
+    is stale (or whose vertex is already peeled) are skipped."""
     n = graph.num_vertices
     deg = graph.degrees().astype(np.int64).copy()
     removed = np.zeros(n, dtype=bool)
     order = np.empty(n, dtype=np.int64)
-    # simple lazy heap via argsort buckets
-    import heapq
-
     heap = [(int(d), int(v)) for v, d in enumerate(deg)]
     heapq.heapify(heap)
     row_ptr, col_idx = graph.row_ptr, graph.col_idx

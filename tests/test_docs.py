@@ -1,7 +1,9 @@
-"""Docs-rot guard: the README's ``python`` code blocks must run verbatim.
+"""Docs-rot guard: the ``python`` code blocks of the front-door docs
+(README.md and DESIGN.md) must run verbatim.
 
 Thin pytest wrapper around tools/check_doc_snippets.py (the same entry the
 CI docs lane uses), so the tier-1 gate catches a stale quickstart too.
+Pseudocode fences are tagged ``python-norun`` and skipped.
 """
 import os
 import sys
@@ -14,7 +16,7 @@ sys.path.insert(0, os.path.join(REPO, "tools"))
 from check_doc_snippets import run_file  # noqa: E402
 
 
-@pytest.mark.parametrize("doc", ["README.md"])
+@pytest.mark.parametrize("doc", ["README.md", "DESIGN.md"])
 def test_doc_snippets_run(doc):
     path = os.path.join(REPO, doc)
     assert os.path.exists(path), f"{doc} is missing"

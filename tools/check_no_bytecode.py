@@ -1,0 +1,45 @@
+"""Fail if compiled-python artifacts are tracked in git.
+
+The repo once carried 79 committed ``__pycache__`` ``.pyc`` files; this
+guard (a CI step in ``.github/workflows/ci.yml``) keeps them from coming
+back: it exits non-zero, listing the offenders, whenever ``git ls-files``
+reports any ``__pycache__`` directory entry or compiled-python suffix.
+
+Usage:
+    python tools/check_no_bytecode.py [repo_root]
+"""
+from __future__ import annotations
+
+import subprocess
+import sys
+
+BAD_SUFFIXES = (".pyc", ".pyo", ".pyd")
+
+
+def tracked_bytecode(repo_root: str = ".") -> list:
+    out = subprocess.run(
+        ["git", "ls-files", "-z"], cwd=repo_root,
+        capture_output=True, check=True)
+    files = [f for f in out.stdout.decode("utf-8", "replace").split("\0") if f]
+    return [
+        f for f in files
+        if f.endswith(BAD_SUFFIXES) or "__pycache__" in f.split("/")
+    ]
+
+
+def main(argv) -> int:
+    repo_root = argv[1] if len(argv) > 1 else "."
+    bad = tracked_bytecode(repo_root)
+    if bad:
+        print("ERROR: compiled-python artifacts are tracked in git "
+              "(add them to .gitignore and `git rm --cached`):",
+              file=sys.stderr)
+        for f in bad:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("ok: no tracked __pycache__/.pyc artifacts")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
