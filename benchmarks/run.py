@@ -22,14 +22,22 @@ override, ``engine_compare`` additionally honors ``--ell``):
                             | oracles, sort/bitmap parity      |
   plan_throughput           | graphs/s: per-call drivers vs    | 11
                             | compile_plan reuse vs plan.map   |
+  frontier_compare          | frontier on/off x engine:        | 13
+                            | round-2+ sweep cost + bit parity |
   kernel_firstfit           | Pallas firstfit vs sort engine   | 13
   comm_schedule             | coloring-scheduled all-to-all    | (none)
+
+``--json out.json`` additionally writes every row machine-readably
+(us_per_call plus each row's structured fields: rounds, colors, frontier
+sizes, cost ratios, ...) — the format the CI slow lane archives as the
+repo's perf trajectory.
 
 See README.md §Benchmarks for the full CLI documentation.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -47,10 +55,16 @@ from repro.core.distance2 import wedge_count
 
 GRAPHS = ["RMAT-ER", "RMAT-G", "RMAT-B"]
 ROWS = []
+RECORDS = []  # machine-readable mirror of ROWS (--json)
 
 
-def _row(name, us, derived):
+def _row(name, us, derived, **fields):
+    """One benchmark result: the CSV line everyone greps, plus a structured
+    record for ``--json`` (``fields`` carries whatever the family measured
+    beyond the us_per_call scalar)."""
     ROWS.append(f"{name},{us:.1f},{derived}")
+    RECORDS.append(dict(name=name, us_per_call=round(us, 1),
+                        derived=derived, **fields))
     print(f"{name},{us:.1f},{derived}")
 
 
@@ -287,6 +301,65 @@ def plan_throughput(scale=11, batch=8):
                      f"colors={mapped[0].num_colors}")
 
 
+def frontier_compare(scale=13, concurrency=64):
+    """Frontier on/off shootout (the ISSUE-4 tentpole claim): after round 1
+    the pending set collapses to a conflicted tail (~1% of |V| in the
+    paper's 16-128-thread regime, which ``concurrency`` defaults to), so
+    compacted rounds cut the per-sweep work from O(E_pad + V*C) to
+    O(cap_e + cap_v*C). Reported per engine and R-MAT family: us_per_call
+    both ways, per-round frontier sizes, and the round-2+ sweep-cost ratio
+    (the slab is fixed-capacity, so capacities ARE the honest per-sweep
+    cost, not the occupancies; spilled rounds pay the full price). Results
+    are asserted bit-identical — the frontier is an execution bypass,
+    never a semantics change."""
+    from repro.core import ColoringSpec, color
+    from repro.core.frontier import frontier_capacities
+    print(f"\n== frontier compare: on/off x engine (scale {scale}, "
+          f"P={concurrency}) ==")
+    for name in GRAPHS:
+        g = rmat.paper_graph(name, scale=scale, seed=0)
+        E_pad, V = g.num_directed_edges, g.num_vertices
+        cap_v, cap_e = frontier_capacities(V, E_pad, g.max_degree())
+        for eng in ["sort", "bitmap"]:
+            base = dict(strategy="iterative", engine=eng,
+                        concurrency=concurrency, max_rounds=256)
+            rep_off, us_off = _timed(
+                color, g, ColoringSpec(frontier="off", **base), repeat=3)
+            rep_on, us_on = _timed(
+                color, g, ColoringSpec(frontier="on", **base), repeat=3)
+            assert np.array_equal(rep_off.colors, rep_on.colors), (name, eng)
+            assert rep_off.rounds == rep_on.rounds
+            assert np.array_equal(rep_off.conflicts_per_round,
+                                  rep_on.conflicts_per_round)
+            assert validate_coloring(g, rep_on.colors)
+            fs = rep_on.frontier_sizes_per_round
+            sweeps = np.asarray(rep_on.sweeps_per_round)
+            # round-2+ sweep cost: edges+vertices processed per sweep, full
+            # path vs the static slab (spilled rounds pay the full price)
+            unit_full, unit_slab = E_pad + V, cap_e + cap_v
+            cost_off = int((sweeps[1:]).sum()) * unit_full
+            cost_on = int(sum(
+                int(s) * (unit_slab if f > 0 else unit_full)
+                for s, f in zip(sweeps[1:], fs[1:])))
+            ratio = cost_off / cost_on if cost_on else float("nan")
+            _row(f"frontier/{name}/{eng}", us_on,
+                 f"us_off={us_off:.1f};rounds={rep_on.rounds};"
+                 f"colors={rep_on.num_colors};"
+                 f"round2plus_cost_ratio={ratio:.1f};"
+                 f"frontier_sizes={[int(f) for f in fs][:12]}",
+                 us_per_call_off=round(us_off, 1),
+                 rounds=int(rep_on.rounds),
+                 colors=int(rep_on.num_colors),
+                 sweeps_per_round=[int(s) for s in sweeps],
+                 conflicts_per_round=[int(c) for c in
+                                      rep_on.conflicts_per_round],
+                 frontier_sizes_per_round=[int(f) for f in fs],
+                 cap_v=cap_v, cap_e=cap_e,
+                 round2plus_cost_off=cost_off,
+                 round2plus_cost_on=cost_on,
+                 round2plus_cost_ratio=round(ratio, 2))
+
+
 def kernel_firstfit(scale=13):
     print(f"\n== Pallas firstfit engine vs sort-mex engine (scale {scale}) ==")
     g = rmat.paper_graph("RMAT-G", scale=scale, seed=0)
@@ -326,6 +399,7 @@ FAMILIES = {
         (lambda a, s: engine_compare(scale=s, with_ell=a.ell), 13),
     "d2_compare": (lambda a, s: d2_compare(scale=s), 9),
     "plan_throughput": (lambda a, s: plan_throughput(scale=s), 11),
+    "frontier_compare": (lambda a, s: frontier_compare(scale=s), 13),
     "kernel_firstfit": (lambda a, s: kernel_firstfit(scale=s), 13),
     "comm_schedule": (lambda a, s: comm_schedule_bench(), None),
 }
@@ -344,6 +418,10 @@ def main() -> None:
     ap.add_argument("--ell", action="store_true",
                     help="include the ell_pallas backend in engine_compare "
                          "(slow off-TPU: kernels run in interpret mode)")
+    ap.add_argument("--json", default=None, metavar="OUT.json",
+                    help="also write every row machine-readably (name, "
+                         "us_per_call, per-family structured fields) — the "
+                         "format CI archives as the perf trajectory")
     args = ap.parse_args()
     selected = (list(FAMILIES) if args.families is None
                 else [f.strip() for f in args.families.split(",") if f.strip()])
@@ -358,6 +436,17 @@ def main() -> None:
     print("name,us_per_call,derived")
     for r in ROWS:
         print(r)
+    if args.json:
+        payload = {
+            "schema": 1,
+            "families": selected,
+            "scale_override": args.scale,
+            "backend": jax.default_backend(),
+            "rows": RECORDS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"\nwrote {len(RECORDS)} rows to {args.json}")
 
 
 if __name__ == "__main__":

@@ -38,15 +38,25 @@ def main():
     ap.add_argument("--model", default="d1", choices=["d1", "d2"],
                     help="coloring model: distance-1 or distance-2 "
                          "(d2 is denser — prefer --scale <= 9)")
+    ap.add_argument("--frontier", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="active-set execution (repro.core.frontier): "
+                         "compact rounds >= 1 into a fixed slab so they "
+                         "cost O(frontier) instead of O(E); bit-identical "
+                         "results either way")
     args = ap.parse_args()
 
     serial_fn = greedy_color if args.model == "d1" else greedy_color_d2
     valid_fn = validate_coloring if args.model == "d1" else validate_d2_coloring
     # D2 constraint graphs are ~avg-degree x denser: conflict rounds rise
     p = args.concurrency if args.model == "d1" else min(args.concurrency, 16)
+    # frontier="on" needs the square (row-deduped) lowering under d2;
+    # "auto"/"off" keep the memory-lean default
+    lowering = "square" if args.frontier == "on" else "auto"
     spec = ColoringSpec(strategy=args.strategy, model=args.model,
                         engine=args.engine, ordering=args.ordering,
-                        concurrency=p, max_rounds=256)
+                        concurrency=p, max_rounds=256,
+                        frontier=args.frontier, lowering=lowering)
     for name in ["RMAT-ER", "RMAT-G", "RMAT-B"]:
         g = rmat.paper_graph(name, scale=args.scale, seed=0)
 
@@ -61,10 +71,12 @@ def main():
               f"maxdeg={s['max_degree']} strategy={args.strategy} "
               f"engine={args.engine} model={args.model} "
               f"ordering={args.ordering}")
+        frontier_rounds = int((rep.frontier_sizes_per_round > 0).sum())
         print(f"  serial greedy : {num_colors(serial):3d} colors")
         print(f"  {args.strategy:14s}: {rep.num_colors:3d} colors, "
               f"{rep.rounds} rounds, {rep.sweeps} sweeps, "
-              f"{rep.total_conflicts} conflicts, {rep.wall_time_s:.3f}s")
+              f"{rep.total_conflicts} conflicts, "
+              f"{frontier_rounds} frontier rounds, {rep.wall_time_s:.3f}s")
         if args.strategy == "dataflow" and args.ordering == "natural":
             # the dataflow fixpoint IS the serial greedy coloring
             assert np.array_equal(rep.colors, serial)

@@ -39,6 +39,13 @@ class ColoringConfig:
     # runtime (host-relabel) knob: the dry-run lowering is ordering-
     # invariant, since a relabeled graph has identical slab shapes.
     ordering: str = "natural"
+    # frontier execution (repro.core.frontier): "auto"/"on" compact
+    # rounds >= 1 into per-shard active-set slabs and shrink the wire to
+    # the frontier halo when every device's pending set fits; "off" sweeps
+    # the full slab every round. Capacities ride the pad_bucket ladder off
+    # the per-device slab shape, so the lowered program stays static.
+    frontier: str = "auto"
+    frontier_capacity: int = 0
 
     def to_spec(self, mesh=None):
         """This config as a :class:`repro.core.api.ColoringSpec` for the
@@ -55,7 +62,9 @@ class ColoringConfig:
                             # the dry-run lowers and the legacy shim runs
                             max_sweeps=16384,
                             local_concurrency=self.local_concurrency,
-                            color_bound=self.color_bound, mesh=mesh)
+                            color_bound=self.color_bound, mesh=mesh,
+                            frontier=self.frontier,
+                            frontier_capacity=self.frontier_capacity)
 
 
 def get_config() -> ColoringConfig:

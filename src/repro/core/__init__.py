@@ -27,13 +27,17 @@ Public API:
   engine                         pluggable first-fit backends: MexBackend,
                                  register_backend, fixpoint_sweep;
                                  engine="sort" | "bitmap" | "ell_pallas"
+  frontier                       active-set execution: rounds >= 1 sweep a
+                                 compacted pending slab (O(active), not
+                                 O(E)); frontier="auto"|"on"|"off" on every
+                                 spec, bit-identical results either way
   distance2                      the model layer: square, partial_square,
                                  d2_device_graph, pd2_device_graph
   validate_coloring / _d2 / _pd2 per-model validity + conflict counting
   comm_schedule                  coloring -> conflict-free collective rounds
 """
 from .graph import Graph, BipartiteGraph, DeviceGraph
-from . import rmat, ordering, engine, distance2
+from . import rmat, ordering, engine, distance2, frontier
 from .engine import (MexBackend, available_backends, get_backend,
                      register_backend)
 from .distance2 import square, partial_square
@@ -55,7 +59,7 @@ __all__ = [
     "ColoringReport", "ColoringStrategy", "PlanShape",
     "register_strategy", "get_strategy", "available_strategies",
     "Graph", "BipartiteGraph", "DeviceGraph", "rmat", "ordering", "engine",
-    "distance2", "square", "partial_square",
+    "distance2", "frontier", "square", "partial_square",
     "greedy_color", "greedy_color_d2", "greedy_color_pd2",
     "MexBackend", "available_backends", "get_backend", "register_backend",
     "color_iterative", "ColoringResult", "color_dataflow", "dataflow_levels",

@@ -40,6 +40,7 @@ model lowering and batching come for free.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Callable, Dict, NamedTuple, Optional, Sequence, Tuple, Union
 
@@ -50,6 +51,7 @@ import jax.numpy as jnp
 
 from .distance2 import MODELS, as_constraint_graph, constraint_host_graph
 from .engine import EngineSpec, MexBackend, get_backend
+from .frontier import FRONTIER_MODES, frontier_capacities, resolve_frontier
 from .graph import DeviceGraph, Graph, pad_bucket
 from .ordering import ORDERINGS
 
@@ -82,7 +84,15 @@ class ColoringSpec:
     max_rounds / max_sweeps / color_bound  as on the legacy drivers;
     mesh         jax Mesh for the distributed strategy (None = 1-device);
     local_concurrency  distributed per-device concurrency (C=1 is the
-                 classic Bozdag scheme).
+                 classic Bozdag scheme);
+    frontier     active-set execution (repro.core.frontier): ``"auto"``
+                 (compact rounds >= 1 whenever the graph carries the
+                 incident-edge auxiliary — the default), ``"on"`` (require
+                 it), ``"off"`` (full sweeps every round). Bit-identical
+                 results either way — the frontier is an execution bypass,
+                 never a semantics change;
+    frontier_capacity  static vertex-slab capacity override (0 = the
+                 |V|/32 bucket ladder; the edge slab scales with it).
     """
 
     strategy: Union[str, "ColoringStrategy"] = "iterative"
@@ -99,6 +109,8 @@ class ColoringSpec:
     mesh: Optional[object] = None  # jax.sharding.Mesh; object keeps the
     # dataclass importable without touching jax.sharding at class-def time
     local_concurrency: int = 1
+    frontier: str = "auto"
+    frontier_capacity: int = 0
 
     def __post_init__(self):
         if self.model not in MODELS:
@@ -107,6 +119,9 @@ class ColoringSpec:
         if self.lowering not in _LOWERINGS:
             raise ValueError(f"unknown lowering {self.lowering!r}; "
                              f"choose from {_LOWERINGS}")
+        if self.frontier not in FRONTIER_MODES:
+            raise ValueError(f"unknown frontier mode {self.frontier!r}; "
+                             f"choose from {FRONTIER_MODES}")
 
     def resolve(self) -> Tuple["ColoringStrategy", MexBackend]:
         """Resolve the registered pieces (strategy, mex backend) by name."""
@@ -127,6 +142,9 @@ class RawColoring(NamedTuple):
     conflicts_per_round: jnp.ndarray  # [max_rounds] int32
     sweeps_per_round: jnp.ndarray     # [max_rounds] int32
     unconverged: jnp.ndarray          # scalar bool
+    frontier_per_round: jnp.ndarray   # [max_rounds] int32: active vertices
+    # compacted in each round (0 = the round took the full-edge path; for
+    # DATAFLOW, entry 0 counts the slab-compacted sweeps instead)
 
 
 def _invert_order(order: np.ndarray) -> np.ndarray:
@@ -157,6 +175,8 @@ def _build_report(raw: "RawColoring", spec: "ColoringSpec",
         colors=colors, rounds=rounds,
         conflicts_per_round=np.asarray(raw.conflicts_per_round)[:rounds],
         sweeps_per_round=np.asarray(raw.sweeps_per_round)[:rounds],
+        frontier_sizes_per_round=(
+            np.asarray(raw.frontier_per_round)[:rounds]),
         wall_time_s=(time.perf_counter() - t0) / max(1, batch_denom),
         spec=spec)
 
@@ -167,8 +187,15 @@ class ColoringReport:
 
     ``colors`` is a host int32 array **in original vertex ids** (any
     ``ordering`` relabeling is undone). Histories are trimmed to ``rounds``
-    entries. ``wall_time_s`` covers lowering + execution + host transfer
-    (plan-batched runs report the amortized per-graph time)."""
+    entries. ``frontier_sizes_per_round[r]`` is the number of active
+    vertices round r swept through the compacted frontier slab (0 = the
+    round took the full-edge path; DATAFLOW reports its slab-compacted
+    sweep count in entry 0). ``wall_time_s`` covers lowering + execution +
+    host transfer (plan-batched runs report the amortized per-graph time).
+
+    Summary scalars (``num_colors``, ``total_conflicts``, ``sweeps``) are
+    memoized — reports get re-summarized in benchmark/serving loops, and
+    ``colors.max()`` over a large coloring is not free."""
 
     colors: np.ndarray
     rounds: int
@@ -176,16 +203,18 @@ class ColoringReport:
     sweeps_per_round: np.ndarray
     wall_time_s: float
     spec: ColoringSpec
+    frontier_sizes_per_round: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int32))
 
-    @property
+    @functools.cached_property
     def num_colors(self) -> int:
         return int(self.colors.max()) if self.colors.size else 0
 
-    @property
+    @functools.cached_property
     def total_conflicts(self) -> int:
         return int(self.conflicts_per_round.sum())
 
-    @property
+    @functools.cached_property
     def sweeps(self) -> int:
         return int(self.sweeps_per_round.sum())
 
@@ -308,12 +337,17 @@ class IterativeStrategy(ColoringStrategy):
         from .iterative import _iterative_impl
 
         def run(dg):
-            colors, rnd, conf, sweeps, left = _iterative_impl(
+            fcv, fce = resolve_frontier(
+                spec.frontier, int(spec.frontier_capacity),
+                num_vertices=dg.num_vertices, padded_edges=dg.padded_edges,
+                max_degree=dg.max_degree, has_inc=dg.has_frontier)
+            colors, rnd, conf, sweeps, fronts, left = _iterative_impl(
                 dg, concurrency=int(spec.concurrency),
                 max_rounds=int(spec.max_rounds),
                 max_sweeps=int(spec.max_sweeps), backend=backend,
-                color_bound=int(spec.color_bound))
-            return RawColoring(colors, rnd, conf, sweeps, left)
+                color_bound=int(spec.color_bound),
+                frontier_cap_v=fcv, frontier_cap_e=fce)
+            return RawColoring(colors, rnd, conf, sweeps, left, fronts)
 
         return run
 
@@ -330,13 +364,19 @@ class DataflowStrategy(ColoringStrategy):
         from .dataflow import _dataflow_impl
 
         def run(dg):
-            colors, n, changed = _dataflow_impl(
+            fcv, fce = resolve_frontier(
+                spec.frontier, int(spec.frontier_capacity),
+                num_vertices=dg.num_vertices, padded_edges=dg.padded_edges,
+                max_degree=dg.max_degree, has_inc=dg.has_frontier)
+            colors, n, changed, nslab = _dataflow_impl(
                 dg, max_sweeps=int(spec.max_sweeps), backend=backend,
-                color_bound=int(spec.color_bound))
+                color_bound=int(spec.color_bound),
+                frontier_cap_v=fcv, frontier_cap_e=fce)
             return RawColoring(colors, jnp.asarray(1, jnp.int32),
                                jnp.zeros((1,), jnp.int32),
                                jnp.reshape(n, (1,)).astype(jnp.int32),
-                               changed)
+                               changed,
+                               jnp.reshape(nslab, (1,)).astype(jnp.int32))
 
         return run
 
@@ -362,22 +402,30 @@ class DistributedStrategy(ColoringStrategy):
     def _build(self, spec: ColoringSpec, mesh, *, verts_local: int,
                edges_local: int, max_colors: int, ell_width: int):
         from .distributed import build_distributed_coloring
+        fcv = fce = 0
+        if spec.frontier != "off":
+            # per-shard slabs: the BSP driver recovers incident-edge
+            # pointers on device, so the frontier is always available here
+            fcv, fce = frontier_capacities(
+                verts_local, edges_local, ell_width,
+                capacity=int(spec.frontier_capacity))
         return build_distributed_coloring(
             mesh, verts_local, edges_local,
             local_concurrency=int(spec.local_concurrency),
             max_rounds=int(spec.max_rounds),
             max_sweeps=int(spec.max_sweeps),
-            engine=spec.engine, max_colors=max_colors, ell_width=ell_width)
+            engine=spec.engine, max_colors=max_colors, ell_width=ell_width,
+            frontier_cap_v=fcv, frontier_cap_e=fce)
 
     def _raw(self, spec: ColoringSpec, num_vertices: int, colors, rounds,
-             conf, sweeps) -> RawColoring:
+             conf, sweeps, fronts) -> RawColoring:
         colors = np.asarray(colors).reshape(-1)[:num_vertices]
         rounds = int(rounds)
         conf = np.asarray(conf)
         unconverged = bool(rounds >= int(spec.max_rounds)
                            and rounds > 0 and conf[rounds - 1] > 0)
         return RawColoring(colors, np.int32(rounds), conf, np.asarray(sweeps),
-                           np.bool_(unconverged))
+                           np.bool_(unconverged), np.asarray(fronts))
 
     def oneshot(self, spec: ColoringSpec, g) -> RawColoring:
         from ..jax_compat import set_mesh
@@ -392,9 +440,10 @@ class DistributedStrategy(ColoringStrategy):
         fn = self._build(spec, mesh, verts_local=Vl, edges_local=lsrc.shape[1],
                          max_colors=max_colors, ell_width=host.max_degree())
         with set_mesh(mesh):
-            colors, rounds, conf, sweeps = fn(jnp.asarray(lsrc),
-                                              jnp.asarray(ldst))
-        return self._raw(spec, host.num_vertices, colors, rounds, conf, sweeps)
+            colors, rounds, conf, sweeps, fronts = fn(jnp.asarray(lsrc),
+                                                      jnp.asarray(ldst))
+        return self._raw(spec, host.num_vertices, colors, rounds, conf,
+                         sweeps, fronts)
 
     def compile(self, spec: ColoringSpec, statics: "PlanShape",
                 trace_hook: Callable[[], None]) -> Callable:
@@ -421,10 +470,10 @@ class DistributedStrategy(ColoringStrategy):
         def executor(host: Graph) -> RawColoring:
             lsrc, ldst, _ = partition_graph(host, D, pad_edges_to=slab)
             with set_mesh(mesh):
-                colors, rounds, conf, sweeps = jfn(jnp.asarray(lsrc),
-                                                   jnp.asarray(ldst))
+                colors, rounds, conf, sweeps, fronts = jfn(jnp.asarray(lsrc),
+                                                           jnp.asarray(ldst))
             return self._raw(spec, statics.num_vertices, colors, rounds,
-                             conf, sweeps)
+                             conf, sweeps, fronts)
 
         return executor
 

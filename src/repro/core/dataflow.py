@@ -23,6 +23,12 @@ pluggable via ``engine=`` exactly as in iterative.py.
 
 :func:`dataflow_levels` exposes the DAG depth / wavefront profile — the
 "available parallelism" the XMT's 16K threads would have exploited.
+
+Under the frontier layer (repro.core.frontier) the fixpoint runs
+*active-set sweeps*: a vertex's iterate can change at sweep s only if one
+of its dependencies changed at sweep s-1, so once the changed set fits the
+static slab each sweep compacts ``dependents(changed)`` and re-evaluates
+only those — same iterates, same sweep count, O(active) per sweep.
 """
 from __future__ import annotations
 
@@ -32,7 +38,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from jax import lax
+
 from .engine import (EngineSpec, SweepSpec, fixpoint_iterate, fixpoint_sweep)
+from .frontier import compact_frontier, frontier_counts
 from .graph import DeviceGraph
 
 
@@ -41,15 +50,17 @@ class DataflowResult:
     colors: jnp.ndarray  # [V] int32, >= 1 — identical to serial greedy
     sweeps: int          # fixpoint sweeps == dataflow DAG depth (+1 check)
 
-    @property
+    @functools.cached_property
     def num_colors(self) -> int:
         return int(self.colors.max())
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("max_sweeps", "backend", "color_bound"))
+                   static_argnames=("max_sweeps", "backend", "color_bound",
+                                    "frontier_cap_v", "frontier_cap_e"))
 def _dataflow_impl(g: DeviceGraph, *, max_sweeps: int, backend,
-                   color_bound: int = 0):
+                   color_bound: int = 0, frontier_cap_v: int = 0,
+                   frontier_cap_e: int = 0):
     V = g.num_vertices
     max_colors = g.max_degree + 1
     if color_bound > 0:
@@ -62,10 +73,77 @@ def _dataflow_impl(g: DeviceGraph, *, max_sweeps: int, backend,
     spec = SweepSpec(key_v=jnp.where(dep, g.src, V),
                      dyn_idx=g.dst, dyn=dep,
                      static_c=jnp.zeros_like(g.dst))
-    colors, n, changed = fixpoint_sweep(
-        mex, spec, jnp.zeros((V,), jnp.int32), jnp.ones((V,), jnp.bool_),
-        max_sweeps=max_sweeps)
-    return colors, n, changed
+    use_frontier = frontier_cap_v > 0 and g.has_frontier
+    if not use_frontier:
+        colors, n, changed = fixpoint_sweep(
+            mex, spec, jnp.zeros((V,), jnp.int32), jnp.ones((V,), jnp.bool_),
+            max_sweeps=max_sweeps)
+        return colors, n, changed, jnp.asarray(0, jnp.int32)
+
+    # Frontier (active-set) sweeps. Vertex v's chaotic iterate can change at
+    # sweep s only if one of its dependencies (smaller-index neighbors)
+    # changed at sweep s-1, so the set that needs re-evaluating is exactly
+    # dependents(changed) — everything else would recompute its own value.
+    # Per sweep: compact the changed vertices' rows to find the dependents,
+    # compact the dependents' rows, run the mex over that slab. Both sets
+    # spill to the full sweep when they overflow the static capacities, so
+    # iterates (and the sweep count) stay bit-identical to the full path.
+    mex_slab = backend.bind_slab(
+        capacity=frontier_cap_v, max_colors=max_colors,
+        ell_width=g.max_degree, max_degree=g.max_degree)
+    cap_v, cap_e = frontier_cap_v, frontier_cap_e
+
+    def full_sweep(cpad):
+        key_c = jnp.where(dep, cpad[spec.dyn_idx], spec.static_c)
+        new = mex(spec.key_v, key_c)
+        changed = new != cpad[:V]
+        return cpad.at[:V].set(new), changed, jnp.asarray(0, jnp.int32)
+
+    def active_sweep(args):
+        cpad, chg = args
+        # dependents of the changed set: one compaction of the changed rows
+        dslab = compact_frontier(chg, g.inc_ptr, g.dst, cap_v, cap_e)
+        dep_e = (dslab.src < V) & (dslab.dst > dslab.src)
+        active = (jnp.zeros((V,), jnp.bool_)
+                  .at[dslab.dst].max(dep_e, mode="drop"))
+        nv, ne = frontier_counts(active, g.inc_ptr)
+
+        def slab_sweep(cpad):
+            slab = compact_frontier(active, g.inc_ptr, g.dst, cap_v, cap_e)
+            forb = (slab.src < V) & (slab.dst < slab.src)
+            key_c = jnp.where(forb, cpad[slab.dst], 0)
+            mexv = mex_slab(jnp.where(forb, slab.owner, cap_v), key_c,
+                            slab.slot)
+            live = slab.vert < V
+            old = cpad[jnp.minimum(slab.vert, V)]
+            chg_new = (jnp.zeros((V,), jnp.bool_)
+                       .at[jnp.minimum(slab.vert, V)]
+                       .max(live & (mexv != old), mode="drop"))
+            cpad = cpad.at[jnp.where(live, slab.vert, V + 1)].set(
+                mexv, mode="drop")
+            return cpad, chg_new, jnp.asarray(1, jnp.int32)
+
+        return lax.cond((nv <= cap_v) & (ne <= cap_e),
+                        slab_sweep, full_sweep, cpad)
+
+    def body(state):
+        cpad, chg, n, _, nslab = state
+        nc, nce = frontier_counts(chg, g.inc_ptr)
+        fits = (n > 0) & (nc <= cap_v) & (nce <= cap_e)
+        cpad, chg, used = lax.cond(
+            fits, active_sweep, lambda a: full_sweep(a[0]), (cpad, chg))
+        still = jnp.any(chg)
+        return cpad, chg, n + 1, still, nslab + used
+
+    def cond(state):
+        _, _, n, still, _ = state
+        return jnp.logical_and(still, n < max_sweeps)
+
+    init = (jnp.zeros((V + 1,), jnp.int32), jnp.ones((V,), jnp.bool_),
+            jnp.asarray(0, jnp.int32), jnp.asarray(True),
+            jnp.asarray(0, jnp.int32))
+    cpad, _, n, still, nslab = lax.while_loop(cond, body, init)
+    return cpad[:V], n, still, nslab
 
 
 def color_dataflow(g, max_sweeps: int = 4096,

@@ -40,6 +40,8 @@ from ..jax_compat import pvary, shard_map
 
 from .engine import (EngineSpec, SweepSpec, edge_slots, fixpoint_sweep,
                      get_backend, lockstep_offsets)
+from .frontier import (FrontierSlab, compact_frontier, frontier_counts,
+                       frontier_sweep)
 from .graph import Graph
 
 
@@ -86,7 +88,8 @@ def partition_graph(graph: Graph, num_devices: int,
 
 def _bsp_local(lsrc, ldst, *, axis_names: Tuple[str, ...], verts_local: int,
                num_devices: int, local_concurrency: int, max_rounds: int,
-               max_sweeps: int, backend, max_colors: int, ell_width: int):
+               max_sweeps: int, backend, max_colors: int, ell_width: int,
+               frontier_cap_v: int = 0, frontier_cap_e: int = 0):
     """Per-device body (runs under shard_map).
 
     Wire format (§Perf H-C1): ONE int16 all_gather per round carrying
@@ -95,6 +98,16 @@ def _bsp_local(lsrc, ldst, *, axis_names: Tuple[str, ...], verts_local: int,
     from it, replacing the two int32 + one bool gathers of the naive BSP
     round (measured 4.4x collective-byte reduction). Colors must stay below
     2^14 (greedy uses <= Delta+1; the paper's graphs use <= 143).
+
+    Frontier rounds (§Frontier, ``frontier_cap_v > 0``): each device
+    compacts its pending vertices + incident slab edges and solves over the
+    compacted slab; when EVERY device's pending set fits its vertex slab
+    (one psum vote), the wire shrinks from the full [Vp] packed gather to a
+    (global id, color) gather of the per-device frontier slabs — the
+    frontier-halo exchange — applied to a loop-carried snapshot/pending
+    view. Any overflow falls back to the full sweep / full wire for that
+    round, so results are bit-identical in all regimes. Round 0 always
+    takes the full path.
 
     The conflict pass stays fused with the wire decode rather than routing
     through engine.speculation_conflicts — the per-machine specialization
@@ -117,6 +130,18 @@ def _bsp_local(lsrc, ldst, *, axis_names: Tuple[str, ...], verts_local: int,
     mex = backend.bind(num_vertices=Vl, max_colors=max_colors,
                        ell_slot=slots, ell_width=ell_width,
                        max_degree=ell_width if backend.needs_ell else -1)
+    use_frontier = frontier_cap_v > 0
+    if use_frontier:
+        mex_slab = backend.bind_slab(
+            capacity=frontier_cap_v, max_colors=max_colors,
+            ell_width=ell_width,
+            max_degree=ell_width if backend.needs_ell else -1)
+        # per-shard incident-edge pointers, recovered on device from the
+        # row-contiguous slab (partition_graph keeps global src order)
+        ldeg = (jnp.zeros((Vl + 1,), jnp.int32)
+                .at[lsrc_safe].add(1))[:Vl]
+        lrow_ptr = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(ldeg)])
 
     def gather(x):
         return lax.all_gather(x, axis_names, tiled=True)
@@ -127,13 +152,13 @@ def _bsp_local(lsrc, ldst, *, axis_names: Tuple[str, ...], verts_local: int,
         return pvary(x, axis_names)
 
     def round_body(state):
-        colors, pending, packed_glob, rnd, conf_hist, sweep_hist, _ = state
-        # (1) decode last round's wire. ALL nonzero colors forbid — including
-        # stale colors of re-pending vertices: over-forbidding never breaks
-        # validity (it slightly biases re-colored vertices away from the
-        # contested color, which helps) and it lets one gather per round
-        # serve both phase 1 and conflict detection (§Perf H-C2).
-        snap = packed_glob.astype(jnp.int32) >> 1               # [Vp]
+        (colors, pending, snap, rnd, conf_hist, sweep_hist,
+         front_hist, _) = state
+        # (1) last round's snapshot view. ALL nonzero colors forbid —
+        # including stale colors of re-pending vertices: over-forbidding
+        # never breaks validity (it slightly biases re-colored vertices away
+        # from the contested color, which helps) and it lets one exchange
+        # per round serve both phase 1 and conflict detection (§Perf H-C2).
         snap_pad = jnp.concatenate([snap, jnp.zeros((1,), jnp.int32)])
         ppad = jnp.concatenate([pending, jnp.zeros((1,), jnp.bool_)])
 
@@ -142,71 +167,180 @@ def _bsp_local(lsrc, ldst, *, axis_names: Tuple[str, ...], verts_local: int,
         opad = jnp.concatenate([offset, jnp.full((1,), jnp.iinfo(jnp.int32).max, jnp.int32)])
 
         src_pending = ppad[lsrc_safe] & (lsrc < Vl)
-        nbr_local_pending = ppad[dst_loc]  # local *and* pending
-        precede = nbr_local_pending & (opad[dst_loc] < opad[lsrc_safe])
+
+        if use_frontier:
+            nv, ne = frontier_counts(pending, lrow_ptr)
+            fits_solve = ((rnd > 0) & (nv <= frontier_cap_v)
+                          & (ne <= frontier_cap_e))
+            # the slab wire only needs the pending VERTICES to fit; every
+            # device must fit for the gathered slabs to reconstruct the
+            # exact global pending set
+            fits_wire = (rnd > 0) & (nv <= frontier_cap_v)
+            all_fit = lax.psum(
+                1 - fits_wire.astype(jnp.int32), axis_names) == 0
+
+            # one compaction serves the local solve, the wire and the
+            # conflict pass — built only when some branch will consume it
+            # (spilled rounds, incl. round 0, skip the work entirely); slab
+            # row space is LOCAL vertex ids, edge targets stay GLOBAL (the
+            # ldst id space, pad = Vp)
+            def _compact(_):
+                return compact_frontier(pending, lrow_ptr, ldst,
+                                        frontier_cap_v, frontier_cap_e,
+                                        dst_pad=Vp)
+
+            def _empty_slab(_):
+                return FrontierSlab(
+                    vert=jnp.full((frontier_cap_v,), Vl, jnp.int32),
+                    owner=jnp.full((frontier_cap_e,), frontier_cap_v,
+                                   jnp.int32),
+                    src=jnp.full((frontier_cap_e,), Vl, jnp.int32),
+                    dst=jnp.full((frontier_cap_e,), Vp, jnp.int32),
+                    slot=jnp.zeros((frontier_cap_e,), jnp.int32),
+                    nv=nv, ne=ne)
+
+            slab = lax.cond(fits_solve | all_fit, _compact, _empty_slab, 0)
 
         # (2) local sequential greedy as an offset-DAG fixpoint (no comms):
         # preceding local-pending neighbors track the live local colors,
         # everyone else contributes the frozen global snapshot.
-        spec = SweepSpec(key_v=jnp.where(src_pending, lsrc, Vl),
-                         dyn_idx=dst_loc, dyn=precede,
-                         static_c=snap_pad[ldst])
-        colors, n_sweeps, _ = fixpoint_sweep(
-            mex, spec, jnp.where(pending, 0, colors), pending,
-            max_sweeps=max_sweeps, wrap=pv)
+        def full_solve(colors):
+            nbr_local_pending = ppad[dst_loc]  # local *and* pending
+            precede = nbr_local_pending & (opad[dst_loc] < opad[lsrc_safe])
+            spec = SweepSpec(key_v=jnp.where(src_pending, lsrc, Vl),
+                             dyn_idx=dst_loc, dyn=precede,
+                             static_c=snap_pad[ldst])
+            colors, n_sweeps, _ = fixpoint_sweep(
+                mex, spec, jnp.where(pending, 0, colors), pending,
+                max_sweeps=max_sweeps, wrap=pv)
+            return colors, n_sweeps
 
-        # (3) single fused wire: color<<1 | was-pending-this-round (int16)
-        packed_local = ((colors << 1) | pending.astype(jnp.int32)).astype(jnp.int16)
-        packed_glob = gather(packed_local)                      # [Vp] int16
-        cglob2 = (packed_glob.astype(jnp.int32) >> 1)
-        aglob2 = (packed_glob & 1).astype(jnp.bool_)
-        cgpad = jnp.concatenate([cglob2, jnp.zeros((1,), jnp.int32)])
-        agpad = jnp.concatenate([aglob2, jnp.zeros((1,), jnp.bool_)])
+        def slab_solve(colors):
+            e_local = (slab.dst >= base) & (slab.dst < base + Vl)
+            e_loc = jnp.where(e_local, slab.dst - base, Vl)
+            precede = ppad[e_loc] & (opad[e_loc] < opad[jnp.minimum(slab.src, Vl)])
+            live = slab.src < Vl
+            cpad0 = (jnp.concatenate([colors, jnp.zeros((1,), jnp.int32)])
+                     .at[slab.vert].set(0, mode="drop"))
+            cpad, n_sweeps, _ = frontier_sweep(
+                mex_slab,
+                key_v=jnp.where(live, slab.owner, frontier_cap_v),
+                dyn=precede, dyn_idx=e_loc,
+                static_c=snap_pad[jnp.minimum(slab.dst, Vp)],
+                slot=slab.slot, write_vert=slab.vert, cpad0=cpad0,
+                max_sweeps=max_sweeps, wrap=pv)
+            return cpad[:Vl], n_sweeps
 
-        # (4) same-round conflicts (boundary + same-offset); higher gid recolors
-        conf_e = (src_pending & agpad[ldst]
-                  & (cgpad[gsrc] == cgpad[ldst]) & (gsrc > ldst))
-        new_pending = (jnp.zeros((Vl,), jnp.int32)
-                       .at[lsrc].max(conf_e.astype(jnp.int32), mode="drop")
-                       .astype(jnp.bool_))
+        if use_frontier:
+            colors, n_sweeps = lax.cond(fits_solve, slab_solve, full_solve,
+                                        colors)
+        else:
+            colors, n_sweeps = full_solve(colors)
+
+        # (3) the wire: full packed gather, or the frontier-halo exchange
+        def full_wire(colors):
+            packed_local = ((colors << 1)
+                            | pending.astype(jnp.int32)).astype(jnp.int16)
+            packed_glob = gather(packed_local)                  # [Vp] int16
+            return (packed_glob.astype(jnp.int32) >> 1,
+                    (packed_glob & 1).astype(jnp.bool_))
+
+        def slab_wire(colors):
+            # only this round's pending vertices changed color or pending
+            # state: gather (gid, color) of the per-device frontier slabs
+            # and patch the carried snapshot/pending view
+            gids = jnp.where(slab.vert < Vl, slab.vert + base, Vp)
+            cols = jnp.concatenate(
+                [colors, jnp.zeros((1,), jnp.int32)])[jnp.minimum(slab.vert, Vl)]
+            g_gids = gather(gids)                               # [D*cap_v]
+            g_cols = gather(cols)
+            snap2 = snap.at[g_gids].set(g_cols, mode="drop")
+            pend2 = (jnp.zeros((Vp,), jnp.bool_)
+                     .at[g_gids].set(True, mode="drop"))
+            return snap2, pend2
+
+        if use_frontier:
+            snap, pend_glob = lax.cond(all_fit, slab_wire, full_wire, colors)
+        else:
+            snap, pend_glob = full_wire(colors)
+        cgpad = jnp.concatenate([snap, jnp.zeros((1,), jnp.int32)])
+        agpad = jnp.concatenate([pend_glob, jnp.zeros((1,), jnp.bool_)])
+
+        # (4) same-round conflicts (boundary + same-offset); higher gid
+        # recolors — over the frontier slab when it holds all local rows
+        def full_conf(_):
+            conf_e = (src_pending & agpad[ldst]
+                      & (cgpad[gsrc] == cgpad[ldst]) & (gsrc > ldst))
+            return (jnp.zeros((Vl,), jnp.int32)
+                    .at[lsrc].max(conf_e.astype(jnp.int32), mode="drop")
+                    .astype(jnp.bool_))
+
+        def slab_conf(_):
+            gsrc_e = jnp.where(slab.src < Vl, slab.src + base, Vp)
+            conf_e = (agpad[jnp.minimum(slab.dst, Vp)]
+                      & (cgpad[jnp.minimum(gsrc_e, Vp)]
+                         == cgpad[jnp.minimum(slab.dst, Vp)])
+                      & (gsrc_e > slab.dst))
+            return (jnp.zeros((Vl,), jnp.int32)
+                    .at[slab.src].max(conf_e.astype(jnp.int32), mode="drop")
+                    .astype(jnp.bool_))
+
+        if use_frontier:
+            new_pending = lax.cond(fits_solve, slab_conf, full_conf, 0)
+        else:
+            new_pending = full_conf(0)
+
         # (5) global termination vote
         total = lax.psum(new_pending.sum(dtype=jnp.int32), axis_names)
         conf_hist = conf_hist.at[rnd].set(total)
         # local sweep depth this round; the caller maxes across devices
         sweep_hist = sweep_hist.at[rnd].set(n_sweeps)
-        return (colors, new_pending, packed_glob, rnd + 1, conf_hist,
-                sweep_hist, total)
+        if use_frontier:
+            front = lax.psum(jnp.where(fits_wire, nv, 0), axis_names)
+            front_hist = front_hist.at[rnd].set(
+                jnp.where(all_fit, front, 0))
+        return (colors, new_pending, snap, rnd + 1, conf_hist,
+                sweep_hist, front_hist, total)
 
     def cond(state):
-        _, _, _, rnd, _, _, total = state
+        total = state[-1]
+        rnd = state[3]
         return jnp.logical_and(total > 0, rnd < max_rounds)
 
     init = (pv(jnp.zeros((Vl,), jnp.int32)), pv(jnp.ones((Vl,), jnp.bool_)),
-            pv(jnp.ones((Vp,), jnp.int16)),  # all uncolored+pending
+            pv(jnp.zeros((Vp,), jnp.int32)),   # snapshot: all uncolored
             pv(jnp.asarray(0, jnp.int32)), pv(jnp.zeros((max_rounds,), jnp.int32)),
             pv(jnp.zeros((max_rounds,), jnp.int32)),
+            pv(jnp.zeros((max_rounds,), jnp.int32)),
             jnp.asarray(1, jnp.int32))  # psum output is axis-invariant
-    colors, pending, packed_glob, rnd, conf_hist, sweep_hist, _ = lax.while_loop(
-        cond, round_body, init)
-    return colors[None], rnd[None], conf_hist[None], sweep_hist[None]
+    (colors, pending, snap, rnd, conf_hist, sweep_hist,
+     front_hist, _) = lax.while_loop(cond, round_body, init)
+    return (colors[None], rnd[None], conf_hist[None], sweep_hist[None],
+            front_hist[None])
 
 
 def build_distributed_coloring(mesh: Mesh, verts_local: int, edges_local: int,
                                local_concurrency: int = 1,
                                max_rounds: int = 64, max_sweeps: int = 16384,
                                engine: EngineSpec = "sort",
-                               max_colors: int = 0, ell_width: int = 0):
+                               max_colors: int = 0, ell_width: int = 0,
+                               frontier_cap_v: int = 0,
+                               frontier_cap_e: int = 0):
     """Build the jitted shard_map coloring program for a mesh.
 
     Returns ``fn(lsrc [D, El], ldst [D, El]) -> (colors [D, Vl], rounds,
-    conflicts_per_round, sweeps_per_round)``; inputs/outputs sharded over
-    all mesh axes (``sweeps_per_round`` is the deepest local fixpoint across
-    devices each round). Static shapes, so the identical program serves
+    conflicts_per_round, sweeps_per_round, frontier_per_round)``;
+    inputs/outputs sharded over all mesh axes (``sweeps_per_round`` is the
+    deepest local fixpoint across devices each round;
+    ``frontier_per_round`` the global frontier size when the round took the
+    compacted wire, else 0). Static shapes, so the identical program serves
     dry-run lowering.
 
     ``engine`` picks the local first-fit backend; ``max_colors`` (global
     Delta+1) sizes the bitmap/ell backends; ``ell_width`` (max degree of any
     owned vertex) is required for ``engine="ell_pallas"``.
+    ``frontier_cap_v``/``frontier_cap_e`` enable the per-shard frontier
+    slabs (0 = full sweeps every round; see repro.core.frontier).
     """
     backend = get_backend(engine)
     if backend.needs_ell and ell_width <= 0:
@@ -223,18 +357,20 @@ def build_distributed_coloring(mesh: Mesh, verts_local: int, edges_local: int,
         _bsp_local, axis_names=axis_names, verts_local=verts_local,
         num_devices=D, local_concurrency=local_concurrency,
         max_rounds=max_rounds, max_sweeps=max_sweeps, backend=backend,
-        max_colors=max_colors, ell_width=ell_width)
+        max_colors=max_colors, ell_width=ell_width,
+        frontier_cap_v=frontier_cap_v, frontier_cap_e=frontier_cap_e)
     spec_in = P(axis_names, None)
     smapped = shard_map(
         body, mesh=mesh,
         in_specs=(spec_in, spec_in),
         out_specs=(P(axis_names, None), P(axis_names), P(axis_names, None),
-                   P(axis_names, None)),
+                   P(axis_names, None), P(axis_names, None)),
     )
 
     def run(lsrc, ldst):
-        colors, rnd, conf, sweeps = smapped(lsrc, ldst)
-        return colors, rnd.max(), conf.max(axis=0), sweeps.max(axis=0)
+        colors, rnd, conf, sweeps, fronts = smapped(lsrc, ldst)
+        return (colors, rnd.max(), conf.max(axis=0), sweeps.max(axis=0),
+                fronts.max(axis=0))
 
     return jax.jit(run)
 

@@ -52,6 +52,12 @@ from .mex import segment_mex
 # key_c[i] the forbidden color (0 = no constraint).
 MexFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
 
+# A slab-bound mex engine (the frontier path): (key_v [cap_e] slab rows,
+# key_c [cap_e], slot [cap_e] within-row positions) -> mex [cap_v]. The
+# extra ``slot`` operand carries the per-round ELL geometry that the
+# full-graph bind closes over statically.
+SlabMexFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
 _INT32_MAX = jnp.iinfo(jnp.int32).max
 
 
@@ -132,6 +138,25 @@ class MexBackend:
              ell_slot: Optional[jnp.ndarray] = None,
              ell_width: int = 0, max_degree: int = -1) -> MexFn:
         raise NotImplementedError
+
+    def bind_slab(self, *, capacity: int, max_colors: int = 0,
+                  ell_width: int = 0, max_degree: int = -1) -> SlabMexFn:
+        """Bind the backend to a fixed-capacity frontier slab
+        (repro.core.frontier): segments are the ``capacity`` slab rows, not
+        the graph's vertices — the bitmap backend's table shrinks from
+        (V+1, C) to (capacity+1, C), the sort backend's segment space to
+        ``capacity``. The returned callable takes a per-round ``slot``
+        operand (each edge's position within its slab row) so ELL-style
+        backends can scatter a compacted slab without a static geometry.
+
+        The default adapter covers layout-free backends; ``needs_ell``
+        backends override it."""
+        if self.needs_ell:  # pragma: no cover - every needs_ell backend
+            raise NotImplementedError(  # must provide its own slab bind
+                f"mex backend {self.name!r} needs an ELL slab bind override")
+        mex = self.bind(num_vertices=capacity, max_colors=max_colors,
+                        max_degree=max_degree)
+        return lambda key_v, key_c, slot: mex(key_v, key_c)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -238,6 +263,30 @@ class EllPallasMexBackend(MexBackend):
 
         return mex
 
+    def bind_slab(self, *, capacity: int, max_colors: int = 0,
+                  ell_width: int = 0, max_degree: int = -1) -> SlabMexFn:
+        """Frontier bind: the kernel consumes a compacted (capacity, D) ELL
+        slab scattered through the per-round ``slot`` operand — no static
+        ell_slot needed, the compaction computes row positions itself."""
+        from ..kernels import ops as kernel_ops
+        from ..kernels.firstfit import firstfit
+
+        D = max(1, int(ell_width if ell_width > 0 else max_degree))
+        if max_degree > D:
+            raise ValueError(
+                f"ell_pallas slab bind: width {D} is below the graph's max "
+                f"degree {max_degree}; a frontier row would drop forbids")
+        words = _resolve_words(self.words, max_colors, self.name)
+        interp = kernel_ops.INTERPRET if self.interpret is None else self.interpret
+        cap = int(capacity)
+
+        def mex(key_v, key_c, slot):
+            slab = (jnp.zeros((cap + 1, D), jnp.int32)
+                    .at[key_v, slot].set(key_c, mode="drop"))
+            return firstfit(slab[:cap], words=words, interpret=interp)
+
+        return mex
+
 
 # --------------------------------------------------------------------------
 # registry
@@ -324,14 +373,23 @@ def fixpoint_sweep(mex: MexFn, spec: SweepSpec, colors0: jnp.ndarray,
     to its fixpoint. ITERATIVE, DATAFLOW and the distributed local solve
     all call this — their differences live entirely in ``spec``.
 
-    Returns (colors, sweeps, still_changing)."""
+    Returns (colors, sweeps, still_changing).
 
-    def sweep(colors):
-        cpad = jnp.concatenate([colors, jnp.zeros((1,), jnp.int32)])
+    The padded color vector is loop-carried state: the phantom slot V is
+    written once at entry and every sweep updates the V-prefix in place
+    (one dynamic-update-slice), instead of re-materializing the [V+1]
+    concatenation per iteration."""
+    V = colors0.shape[0]
+
+    def sweep(cpad):
         key_c = jnp.where(spec.dyn, cpad[spec.dyn_idx], spec.static_c)
-        return jnp.where(pending, mex(spec.key_v, key_c), colors)
+        new = jnp.where(pending, mex(spec.key_v, key_c), cpad[:V])
+        return cpad.at[:V].set(new)
 
-    return fixpoint_iterate(sweep, colors0, max_iters=max_sweeps, wrap=wrap)
+    cpad0 = jnp.concatenate([colors0, jnp.zeros((1,), jnp.int32)])
+    cpad, n, changed = fixpoint_iterate(sweep, cpad0, max_iters=max_sweeps,
+                                        wrap=wrap)
+    return cpad[:V], n, changed
 
 
 def lockstep_offsets(pending: jnp.ndarray, concurrency: int) -> jnp.ndarray:

@@ -181,6 +181,14 @@ class Graph:
         if pad < 0:
             raise ValueError(f"pad_edges_to={pad_edges_to} < num edges {e}")
 
+        # incident-edge auxiliary (every layout): [V+1] int32 row pointers
+        # into the (row-contiguous) directed edge list — one gather is all
+        # the frontier layer needs to compact an active vertex set with its
+        # incident constraint edges (repro.core.frontier.compact_frontier)
+        inc_ptr_dev = None
+        if self.num_directed_edges <= np.iinfo(np.int32).max:
+            inc_ptr_dev = jnp.asarray(self.row_ptr.astype(np.int32))
+
         row_ptr_dev = col_idx_dev = slot_dev = None
         width = 0
         if "csr" in layouts:
@@ -217,6 +225,7 @@ class Graph:
             col_idx=col_idx_dev,
             ell_slot=slot_dev,
             ell_width=width,
+            inc_ptr=inc_ptr_dev,
         )
 
     def to_ell(self, max_degree: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray]:
@@ -332,6 +341,11 @@ class DeviceGraph:
     col_idx: Optional[jnp.ndarray] = None   # [2E]  int32 (layout="csr")
     ell_slot: Optional[jnp.ndarray] = None  # [E2p] int32 (layout="ell")
     ell_width: int = 0                      # static slab width (layout="ell")
+    inc_ptr: Optional[jnp.ndarray] = None   # [V+1] int32 incident-edge row
+    # pointers into src/dst (attached by to_device under EVERY layout; its
+    # presence asserts the edge list is row-contiguous — the frontier
+    # layer's compaction invariant). Hand-built edge lists (e.g. the wedge
+    # multisets) leave it None, which disables the frontier path.
 
     @property
     def padded_edges(self) -> int:
@@ -345,21 +359,28 @@ class DeviceGraph:
     def has_ell(self) -> bool:
         return self.ell_slot is not None
 
+    @property
+    def has_frontier(self) -> bool:
+        """True when the incident-edge auxiliary is present, i.e. the
+        frontier execution layer can compact active sets on this graph."""
+        return self.inc_ptr is not None
+
 
 def _devicegraph_flatten(g: DeviceGraph):
-    children = (g.src, g.dst, g.row_ptr, g.col_idx, g.ell_slot)
+    children = (g.src, g.dst, g.row_ptr, g.col_idx, g.ell_slot, g.inc_ptr)
     aux = (g.num_vertices, g.num_directed_edges, g.max_degree, g.ell_width)
     return children, aux
 
 
 def _devicegraph_unflatten(aux, children):
-    src, dst, row_ptr, col_idx, ell_slot = children
+    src, dst, row_ptr, col_idx, ell_slot, inc_ptr = children
     num_vertices, num_directed_edges, max_degree, ell_width = aux
     return DeviceGraph(num_vertices=num_vertices,
                        num_directed_edges=num_directed_edges,
                        src=src, dst=dst, max_degree=max_degree,
                        row_ptr=row_ptr, col_idx=col_idx,
-                       ell_slot=ell_slot, ell_width=ell_width)
+                       ell_slot=ell_slot, ell_width=ell_width,
+                       inc_ptr=inc_ptr)
 
 
 jax.tree_util.register_pytree_node(

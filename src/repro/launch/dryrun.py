@@ -177,9 +177,20 @@ def lower_coloring(mesh):
         e2 *= 2 * ccfg.edge_factor
     vl = -(-v // D)
     el = int(e2 / D * 1.35)  # slab padding headroom for R-MAT skew
+    fcv = fce = 0
+    if ccfg.frontier != "off":
+        # per-shard frontier slabs on the same static envelope: frontier
+        # rounds + the compacted halo wire lower here too. Shapes-only
+        # caveat: with no host graph there is no max-degree term, so on
+        # skewed graphs the runtime edge slab can be wider than this
+        # lowering's (the vertex slab and program structure are identical)
+        from repro.core.frontier import frontier_capacities
+        fcv, fce = frontier_capacities(vl, el,
+                                       capacity=ccfg.frontier_capacity)
     fn = build_distributed_coloring(mesh, vl, el, ccfg.local_concurrency,
                                     ccfg.max_rounds, engine=ccfg.engine,
-                                    max_colors=ccfg.color_bound)
+                                    max_colors=ccfg.color_bound,
+                                    frontier_cap_v=fcv, frontier_cap_e=fce)
     lsrc = jax.ShapeDtypeStruct((D, el), jnp.int32)
     ldst = jax.ShapeDtypeStruct((D, el), jnp.int32)
     with set_mesh(mesh):

@@ -224,7 +224,7 @@ def test_device_graph_is_pytree():
     g = _graph("RMAT-ER", scale=8)
     dg = g.to_device(layout=("edges", "ell"))
     leaves = jax.tree.leaves(dg)
-    assert len(leaves) == 3  # src, dst, ell_slot
+    assert len(leaves) == 4  # src, dst, ell_slot, inc_ptr (frontier aux)
     dg2 = jax.tree.map(lambda x: x, dg)
     assert dg2.num_vertices == dg.num_vertices
     assert dg2.max_degree == dg.max_degree
