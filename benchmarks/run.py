@@ -24,13 +24,18 @@ override, ``engine_compare`` additionally honors ``--ell``):
                             | compile_plan reuse vs plan.map   |
   frontier_compare          | frontier on/off x engine:        | 13
                             | round-2+ sweep cost + bit parity |
+  stream_compare            | streaming deltas: incremental    | 10
+                            | "recolor" repair vs fresh full   |
+                            | recoloring, per batch size       |
   kernel_firstfit           | Pallas firstfit vs sort engine   | 13
   comm_schedule             | coloring-scheduled all-to-all    | (none)
 
 ``--json out.json`` additionally writes every row machine-readably
 (us_per_call plus each row's structured fields: rounds, colors, frontier
 sizes, cost ratios, ...) — the format the CI slow lane archives as the
-repo's perf trajectory.
+repo's perf trajectory. The file is (re)written atomically after EVERY
+completed family (tmp file + rename), so one crashing family can never
+lose the rows the earlier families already produced.
 
 See README.md §Benchmarks for the full CLI documentation.
 """
@@ -38,6 +43,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
@@ -360,6 +366,68 @@ def frontier_compare(scale=13, concurrency=64):
                  round2plus_cost_ratio=round(ratio, 2))
 
 
+def stream_compare(scale=10, concurrency=64, batch_fracs=(0.001, 0.01, 0.1)):
+    """Streaming-delta shootout (the ISSUE-5 tentpole claim): a graph under
+    edge churn is repaired incrementally — the endpoints of newly
+    conflicting edges seed the compacted frontier of a ``"recolor"`` run
+    (repro.core.dynamic) — vs recolored from scratch. Both paths run the
+    SAME compiled plan (warm start vs cold start of one program), so the
+    ratio isolates the algorithmic saving: O(seed slab) sweeps + zero
+    retrace vs a full speculation pass over the padded edge list. Reported
+    per engine, R-MAT family and delta-batch size (0.1% / 1% / 10% of
+    |E|); repaired colorings are asserted valid and within the provable
+    ``max_degree_seen + 1`` palette bound for every engine backend, and
+    the fresh-vs-incremental color ratio rides the JSON row."""
+    from repro.core import ColoringSpec, DynamicColoring
+    print(f"\n== stream compare: incremental repair vs full recolor "
+          f"(scale {scale}, P={concurrency}) ==")
+    rng = np.random.default_rng(0)
+    for name in GRAPHS:
+        g = rmat.paper_graph(name, scale=scale, seed=0)
+        V = g.num_vertices
+        for eng in ["sort", "bitmap"]:
+            dyn = DynamicColoring(
+                g, ColoringSpec(strategy="recolor", engine=eng,
+                                concurrency=concurrency, max_rounds=256))
+            for frac in batch_fracs:
+                m = max(1, int(dyn.graph.num_edges * frac))
+                ins = np.stack([rng.integers(0, V, m),
+                                rng.integers(0, V, m)], 1)
+                cur = dyn.graph.undirected_edges()
+                dels = cur[rng.choice(cur.shape[0], m, replace=False)]
+                dr = dyn.apply_batch(inserts=ins, deletes=dels)
+                us_inc = dr.wall_time_s * 1e6
+                # fresh full recoloring of the SAME updated graph through
+                # the same plan (cold start: no state = everything pending)
+                fresh, us_full = _timed(dyn.plan, dyn.graph, repeat=1)
+                assert validate_coloring(dyn.graph, dyn.colors), (name, eng)
+                assert validate_coloring(dyn.graph, fresh.colors), (name, eng)
+                # the provable invariant is on color VALUES (no assigned
+                # color exceeds max_degree_seen + 1); the distinct count
+                # is <= that but would not catch a runaway color
+                assert int(dyn.colors.max()) <= dyn.color_bound, (name, eng)
+                assert dyn.num_colors <= dyn.color_bound, (name, eng)
+                ratio = us_full / max(us_inc, 1e-9)
+                _row(f"stream/{name}/{eng}/b{frac}", us_inc,
+                     f"us_full={us_full:.1f};repair_speedup={ratio:.1f}x;"
+                     f"seed={dr.seed_size};delta=+{dr.inserted}/-{dr.deleted};"
+                     f"colors_inc={dyn.num_colors};"
+                     f"colors_fresh={fresh.num_colors};"
+                     f"bound={dyn.color_bound}",
+                     us_per_call_full=round(us_full, 1),
+                     repair_speedup=round(ratio, 2),
+                     batch_frac=frac, inserted=dr.inserted,
+                     deleted=dr.deleted, seed_size=dr.seed_size,
+                     repaired=dr.repaired,
+                     colors_incremental=dyn.num_colors,
+                     colors_fresh=fresh.num_colors,
+                     color_bound=dyn.color_bound,
+                     color_ratio=round(
+                         dyn.num_colors / max(1, fresh.num_colors), 3),
+                     plan_traces=dyn.plan.traces,
+                     recompiles=dyn.recompiles)
+
+
 def kernel_firstfit(scale=13):
     print(f"\n== Pallas firstfit engine vs sort-mex engine (scale {scale}) ==")
     g = rmat.paper_graph("RMAT-G", scale=scale, seed=0)
@@ -400,9 +468,39 @@ FAMILIES = {
     "d2_compare": (lambda a, s: d2_compare(scale=s), 9),
     "plan_throughput": (lambda a, s: plan_throughput(scale=s), 11),
     "frontier_compare": (lambda a, s: frontier_compare(scale=s), 13),
+    "stream_compare": (lambda a, s: stream_compare(scale=s), 10),
     "kernel_firstfit": (lambda a, s: kernel_firstfit(scale=s), 13),
     "comm_schedule": (lambda a, s: comm_schedule_bench(), None),
 }
+
+
+def _flush_json(path: str, families_done, args) -> None:
+    """(Re)write the JSON artifact atomically — tmp file in the target's
+    directory, then rename — so a crash mid-run (or mid-write) can never
+    lose or corrupt the rows of already-completed families."""
+    payload = {
+        "schema": 1,
+        "families": list(families_done),
+        "scale_override": args.scale,
+        "backend": jax.default_backend(),
+        "rows": RECORDS,
+    }
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1)
+    os.replace(tmp, path)
+
+
+def run_families(selected, args, json_path=None) -> None:
+    """Run each family in order, flushing the JSON artifact after EVERY
+    completed family — one crashing family loses only its own rows."""
+    done = []
+    for fam in selected:
+        runner, default_scale = FAMILIES[fam]
+        runner(args, args.scale or default_scale)
+        done.append(fam)
+        if json_path:
+            _flush_json(json_path, done, args)
 
 
 def main() -> None:
@@ -429,23 +527,12 @@ def main() -> None:
     if unknown:
         ap.error(f"unknown families {unknown}; known: {', '.join(FAMILIES)}")
     print("name,us_per_call,derived")
-    for fam in selected:
-        runner, default_scale = FAMILIES[fam]
-        runner(args, args.scale or default_scale)
+    run_families(selected, args, json_path=args.json)
     print("\n-- CSV --")
     print("name,us_per_call,derived")
     for r in ROWS:
         print(r)
     if args.json:
-        payload = {
-            "schema": 1,
-            "families": selected,
-            "scale_override": args.scale,
-            "backend": jax.default_backend(),
-            "rows": RECORDS,
-        }
-        with open(args.json, "w") as f:
-            json.dump(payload, f, indent=1)
         print(f"\nwrote {len(RECORDS)} rows to {args.json}")
 
 

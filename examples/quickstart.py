@@ -12,14 +12,21 @@ validates every result against the model's rules and serial oracle.
     PYTHONPATH=src python examples/quickstart.py --strategy dataflow \\
         --ordering largest_first
     PYTHONPATH=src python examples/quickstart.py --scale 8 --model d2
+    PYTHONPATH=src python examples/quickstart.py --scale 10 --stream 4
+
+``--stream N`` additionally pushes N ~1%-edge delta batches through
+``repro.core.DynamicColoring`` — the streaming lane: inserts/deletes are
+repaired in place by the ``"recolor"`` strategy, seeded with only the
+newly conflicting endpoints, with zero retrace across batches.
 """
 import argparse
 
 import numpy as np
 
-from repro.core import (rmat, color, ColoringSpec, available_backends,
-                        available_strategies, greedy_color, greedy_color_d2,
-                        validate_coloring, validate_d2_coloring, num_colors)
+from repro.core import (rmat, color, ColoringSpec, DynamicColoring,
+                        available_backends, available_strategies,
+                        greedy_color, greedy_color_d2, validate_coloring,
+                        validate_d2_coloring, num_colors)
 from repro.core.ordering import ORDERINGS
 
 
@@ -44,6 +51,11 @@ def main():
                          "compact rounds >= 1 into a fixed slab so they "
                          "cost O(frontier) instead of O(E); bit-identical "
                          "results either way")
+    ap.add_argument("--stream", type=int, default=0, metavar="N",
+                    help="after coloring, stream N ~1%%-edge delta batches "
+                         "through repro.core.DynamicColoring: incremental "
+                         "'recolor' repairs seeded by the newly conflicting "
+                         "endpoints (d1 only)")
     args = ap.parse_args()
 
     serial_fn = greedy_color if args.model == "d1" else greedy_color_d2
@@ -81,6 +93,32 @@ def main():
             # the dataflow fixpoint IS the serial greedy coloring
             assert np.array_equal(rep.colors, serial)
             print("                  (bit-identical to the serial oracle)")
+
+        if args.stream > 0 and args.model != "d1":
+            print("  (--stream skipped: streaming repair is d1 only — an "
+                  "edge delta perturbs d2 constraints beyond its endpoints)")
+        elif args.stream > 0:
+            # streaming lane: ~1% edge-delta batches repaired in place by
+            # the "recolor" strategy (repro.core.dynamic)
+            dyn = DynamicColoring(
+                g, ColoringSpec(strategy="recolor", engine=args.engine,
+                                concurrency=p, max_rounds=256,
+                                frontier=args.frontier))
+            rng = np.random.default_rng(0)
+            m = max(1, g.num_edges // 100)
+            for _ in range(args.stream):
+                ins = np.stack([rng.integers(0, g.num_vertices, m),
+                                rng.integers(0, g.num_vertices, m)], 1)
+                cur = dyn.graph.undirected_edges()
+                dr = dyn.apply_batch(
+                    inserts=ins,
+                    deletes=cur[rng.integers(0, cur.shape[0], m)])
+                assert valid_fn(dyn.graph, dyn.colors)
+            print(f"  streamed {args.stream} delta batches (~{m} ins/del "
+                  f"each): {dyn.num_colors} colors "
+                  f"(bound {dyn.color_bound}), last seed "
+                  f"{dr.seed_size}, retraces={dyn.plan.traces}, "
+                  f"recompiles={dyn.recompiles}")
 
 
 if __name__ == "__main__":

@@ -47,6 +47,27 @@ class ColoringConfig:
     frontier: str = "auto"
     frontier_capacity: int = 0
 
+    def to_dynamic_spec(self):
+        """This config as the streaming-lane :class:`ColoringSpec`: the
+        registered ``"recolor"`` strategy with this config's engine /
+        bounds / frontier knobs — what a
+        :class:`repro.core.dynamic.DynamicColoring` over the paper's
+        workload runs when the R-MAT graph arrives as edge-delta batches
+        instead of one static snapshot. Distance-1 only — the streaming
+        layer's endpoint seeding under-repairs richer models, so a
+        d2/pd2 config raises here instead of silently coercing."""
+        if self.model != "d1":
+            raise ValueError(
+                f"streaming (recolor) is distance-1 only; config has "
+                f"model={self.model!r}")
+        from repro.core.api import ColoringSpec
+        return ColoringSpec(strategy="recolor", engine=self.engine,
+                            ordering="natural",  # recolor repairs in place
+                            max_rounds=self.max_rounds,
+                            color_bound=self.color_bound,
+                            frontier=self.frontier,
+                            frontier_capacity=self.frontier_capacity)
+
     def to_spec(self, mesh=None):
         """This config as a :class:`repro.core.api.ColoringSpec` for the
         registered ``"distributed"`` strategy — the runtime counterpart of

@@ -31,6 +31,11 @@ Public API:
                                  compacted pending slab (O(active), not
                                  O(E)); frontier="auto"|"on"|"off" on every
                                  spec, bit-identical results either way
+  DynamicColoring / DeltaReport  streaming graphs (dynamic.py): edge
+                                 insert/delete batches repaired in place
+                                 by seeding the frontier with the newly
+                                 conflicting endpoints — the registered
+                                 "recolor" strategy's warm start
   distance2                      the model layer: square, partial_square,
                                  d2_device_graph, pd2_device_graph
   validate_coloring / _d2 / _pd2 per-model validity + conflict counting
@@ -53,13 +58,16 @@ from . import api
 from .api import (ColoringPlan, ColoringReport, ColoringSpec,
                   ColoringStrategy, PlanShape, available_strategies, color,
                   compile_plan, get_strategy, register_strategy)
+from . import dynamic
+from .dynamic import DeltaReport, DynamicColoring
 
 __all__ = [
     "api", "color", "compile_plan", "ColoringSpec", "ColoringPlan",
     "ColoringReport", "ColoringStrategy", "PlanShape",
     "register_strategy", "get_strategy", "available_strategies",
     "Graph", "BipartiteGraph", "DeviceGraph", "rmat", "ordering", "engine",
-    "distance2", "frontier", "square", "partial_square",
+    "distance2", "frontier", "dynamic", "DynamicColoring", "DeltaReport",
+    "square", "partial_square",
     "greedy_color", "greedy_color_d2", "greedy_color_pd2",
     "MexBackend", "available_backends", "get_backend", "register_backend",
     "color_iterative", "ColoringResult", "color_dataflow", "dataflow_levels",

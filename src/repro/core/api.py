@@ -52,7 +52,7 @@ import jax.numpy as jnp
 from .distance2 import MODELS, as_constraint_graph, constraint_host_graph
 from .engine import EngineSpec, MexBackend, get_backend
 from .frontier import FRONTIER_MODES, frontier_capacities, resolve_frontier
-from .graph import DeviceGraph, Graph, pad_bucket
+from .graph import BipartiteGraph, DeviceGraph, Graph, pad_bucket
 from .ordering import ORDERINGS
 
 _LOWERINGS = ("auto", "wedge", "square")
@@ -181,6 +181,38 @@ def _build_report(raw: "RawColoring", spec: "ColoringSpec",
         spec=spec)
 
 
+def _trivial_report(spec: "ColoringSpec", num_vertices: int, t0: float, *,
+                    batch_denom: int = 1,
+                    colors: Optional[np.ndarray] = None) -> "ColoringReport":
+    """The degenerate result (V=0, or no constraint edges at all): every
+    vertex takes color 1 — vacuously valid — in zero rounds. The engines
+    never run, so no phantom slab is ever allocated. ``colors`` preserves
+    a recolor warm start: committed (positive) entries pass through
+    untouched — any positive coloring is valid without constraints — and
+    only uncolored slots take color 1."""
+    if colors is not None:
+        carried = np.asarray(colors).astype(np.int32)
+        carried = np.where(carried > 0, carried, 1).astype(np.int32)
+    else:
+        carried = np.ones(num_vertices, np.int32)
+    empty = np.zeros(0, np.int32)
+    return ColoringReport(
+        colors=carried, rounds=0,
+        conflicts_per_round=empty, sweeps_per_round=empty.copy(),
+        frontier_sizes_per_round=empty.copy(),
+        wall_time_s=(time.perf_counter() - t0) / max(1, batch_denom),
+        spec=spec)
+
+
+def _graph_extent(g, spec: "ColoringSpec") -> Tuple[int, int]:
+    """(colored-class size, raw edge count) of an input graph, readable
+    without lowering the coloring model — the degenerate-input check."""
+    if isinstance(g, BipartiteGraph):
+        n = g.num_left if spec.side == "left" else g.num_right
+        return n, g.num_edges
+    return g.num_vertices, g.num_directed_edges
+
+
 @dataclasses.dataclass
 class ColoringReport:
     """The one result type every strategy produces.
@@ -194,8 +226,10 @@ class ColoringReport:
     host transfer (plan-batched runs report the amortized per-graph time).
 
     Summary scalars (``num_colors``, ``total_conflicts``, ``sweeps``) are
-    memoized — reports get re-summarized in benchmark/serving loops, and
-    ``colors.max()`` over a large coloring is not free."""
+    memoized — reports get re-summarized in benchmark/serving loops, and a
+    distinct-count over a large coloring is not free. ``num_colors`` is
+    the number of DISTINCT positive colors, not ``colors.max()``:
+    recolor/delete paths legitimately leave palette gaps."""
 
     colors: np.ndarray
     rounds: int
@@ -208,7 +242,10 @@ class ColoringReport:
 
     @functools.cached_property
     def num_colors(self) -> int:
-        return int(self.colors.max()) if self.colors.size else 0
+        # distinct positive colors, NOT colors.max(): recolor/delete paths
+        # leave palette gaps, and the max would overstate the count
+        from .metrics import num_colors as _distinct
+        return _distinct(self.colors)
 
     @functools.cached_property
     def total_conflicts(self) -> int:
@@ -264,17 +301,32 @@ class ColoringStrategy:
                                  strategy=spec.lowering, side=spec.side)
         return self.device_program(spec, backend)(dg)
 
+    def plan_state(self, spec: ColoringSpec, statics: "PlanShape",
+                   **runtime) -> Tuple:
+        """Normalize per-call runtime state (``plan(g, key=value, ...)``)
+        into the extra device arguments this strategy's compiled program
+        takes. The base strategies are stateless — any runtime kwarg is an
+        error; the ``"recolor"`` strategy overrides this to accept the
+        (colors, seed) warm-start pair. Shapes derive from ``statics``
+        only, so state never breaks the zero-retrace guarantee."""
+        if runtime:
+            raise TypeError(
+                f"strategy {self.name!r} takes no per-call state; got "
+                f"{sorted(runtime)}")
+        return ()
+
     def compile(self, spec: ColoringSpec, statics: "PlanShape",
                 trace_hook: Callable[[], None]) -> Callable:
         """Plan-time compilation: one jitted program over the canonical
-        (bucket-padded) DeviceGraph. ``trace_hook`` runs at trace time only
-        — the plan counts traces with it, and tests assert the count stays
-        at one across same-bucket graphs."""
+        (bucket-padded) DeviceGraph (plus any :meth:`plan_state` extras).
+        ``trace_hook`` runs at trace time only — the plan counts traces
+        with it, and tests assert the count stays at one across
+        same-bucket graphs."""
         prog = self.device_program(spec, get_backend(spec.engine))
 
-        def run(dg):
+        def run(dg, *state):
             trace_hook()
-            return prog(dg)
+            return prog(dg, *state)
 
         return jax.jit(run)
 
@@ -478,9 +530,84 @@ class DistributedStrategy(ColoringStrategy):
         return executor
 
 
+@dataclasses.dataclass(frozen=True)
+class RecolorStrategy(ColoringStrategy):
+    """Rokos-style detect-and-recolor (arXiv:1505.04086) as a registered
+    strategy — the paper's speculation loop run from a caller-supplied
+    warm start instead of the cold (no colors, all pending) one.
+
+    Per-call state rides :meth:`plan_state`: ``plan(g, colors=, seed=)``
+    hands the compiled program the committed color vector plus the seed
+    mask of vertices to repair (the endpoints of newly conflicting edges,
+    under streaming deltas — repro.core.dynamic builds exactly that).
+    Phase 1 then recolors ONLY the seed set — committed neighbors forbid
+    their colors, so a repaired coloring is valid by the same argument as
+    a fresh one — and because the seed is a tiny conflicted tail, round 0
+    already takes the compacted frontier path (``seed_frontier``), making
+    a delta repair cost O(frontier slab), not O(E).
+
+    With no state supplied (``color(g, strategy="recolor")``, or a bare
+    ``plan(g)``), the warm start degenerates to the cold start and the
+    strategy is bit-identical to ``"iterative"``. Both arrays are [V] in
+    the plan's vertex-id space, so ``ordering`` must stay ``"natural"``
+    whenever state is passed. ``plan.map`` is unsupported (delta repairs
+    are latency-bound single calls, not throughput batches)."""
+
+    name = "recolor"
+    supports_map = False
+
+    def device_program(self, spec, backend):
+        from .iterative import _iterative_impl
+
+        def run(dg, colors0=None, pending0=None):
+            fcv, fce = resolve_frontier(
+                spec.frontier, int(spec.frontier_capacity),
+                num_vertices=dg.num_vertices, padded_edges=dg.padded_edges,
+                max_degree=dg.max_degree, has_inc=dg.has_frontier)
+            colors, rnd, conf, sweeps, fronts, left = _iterative_impl(
+                dg, colors0, pending0, concurrency=int(spec.concurrency),
+                max_rounds=int(spec.max_rounds),
+                max_sweeps=int(spec.max_sweeps), backend=backend,
+                color_bound=int(spec.color_bound),
+                frontier_cap_v=fcv, frontier_cap_e=fce,
+                seed_frontier=True)
+            return RawColoring(colors, rnd, conf, sweeps, left, fronts)
+
+        return run
+
+    def plan_state(self, spec, statics, colors=None, seed=None):
+        if (colors is not None or seed is not None) \
+                and spec.ordering != "natural":
+            # cold starts are ordering-invariant (the plan relabels and
+            # un-relabels as usual); only a WARM start pins vertex ids
+            raise ValueError(
+                "recolor repairs an existing coloring in place: state "
+                "arrays are in plan vertex ids, so ordering must be "
+                "'natural' (got {!r})".format(spec.ordering))
+        V = statics.num_vertices
+        if colors is None:
+            colors_d = jnp.zeros((V,), jnp.int32)
+        else:
+            colors = np.asarray(colors)
+            if colors.shape != (V,):
+                raise ValueError(f"recolor state: colors shape "
+                                 f"{colors.shape} != ({V},)")
+            colors_d = jnp.asarray(colors.astype(np.int32))
+        if seed is None:
+            seed_d = jnp.ones((V,), jnp.bool_)
+        else:
+            seed = np.asarray(seed)
+            if seed.shape != (V,):
+                raise ValueError(f"recolor state: seed shape "
+                                 f"{seed.shape} != ({V},)")
+            seed_d = jnp.asarray(seed.astype(np.bool_))
+        return colors_d, seed_d
+
+
 register_strategy(IterativeStrategy())
 register_strategy(DataflowStrategy())
 register_strategy(DistributedStrategy())
+register_strategy(RecolorStrategy())
 
 
 # --------------------------------------------------------------------------
@@ -538,8 +665,14 @@ class ColoringPlan:
             raise ValueError(f"unknown ordering {spec.ordering!r}; "
                              f"choose from {sorted(ORDERINGS)}")
         self._traces = 0
-        self._executor = self.strategy.compile(spec, self.statics,
-                                               self._count_trace)
+        # a degenerate envelope (no vertices, or no constraint-edge
+        # capacity at all) never compiles or runs a program: every served
+        # graph is vacuously colored with color 1 — no phantom slabs
+        self._degenerate = (self.statics.num_vertices == 0
+                            or self.statics.padded_edges == 0)
+        self._executor = (None if self._degenerate else
+                          self.strategy.compile(spec, self.statics,
+                                                self._count_trace))
         self._batched: Optional[Callable] = None
 
     # ------------------------------------------------------------- internals
@@ -598,10 +731,19 @@ class ColoringPlan:
                              batch_denom=batch_denom)
 
     # ------------------------------------------------------------ execution
-    def __call__(self, g) -> ColoringReport:
+    def __call__(self, g, **runtime) -> ColoringReport:
+        """Color ``g`` through the compiled program. ``runtime`` kwargs are
+        per-call state for strategies that take it (``"recolor"``:
+        ``colors=``, ``seed=``); stateless strategies reject any."""
         t0 = time.perf_counter()
         canon, perm = self._canonicalize(g)
-        raw = self._executor(canon)
+        state = self.strategy.plan_state(self.spec, self.statics, **runtime)
+        if self._degenerate:  # validated above; nothing to run — but a
+            # recolor warm start keeps its committed colors (the strategy
+            # contract: non-seed vertices never change)
+            return _trivial_report(self.spec, self.statics.num_vertices, t0,
+                                   colors=runtime.get("colors"))
+        raw = self._executor(canon, *state)
         return self._finish(raw, perm, t0)
 
     def map(self, graphs: Sequence) -> list:
@@ -619,6 +761,10 @@ class ColoringPlan:
             return []
         t0 = time.perf_counter()
         canons, perms = zip(*(self._canonicalize(g) for g in graphs))
+        if self._degenerate:
+            return [_trivial_report(self.spec, self.statics.num_vertices,
+                                    t0, batch_denom=len(graphs))
+                    for _ in graphs]
         if self._batched is None:
             self._batched = self.strategy.compile_batched(
                 self.spec, self.statics, self._count_trace)
@@ -662,6 +808,12 @@ def color(g, spec: Optional[ColoringSpec] = None, **overrides) -> ColoringReport
         raise ValueError(f"unknown ordering {spec.ordering!r}; "
                          f"choose from {sorted(ORDERINGS)}")
     t0 = time.perf_counter()
+    num_colored, num_edges = _graph_extent(g, spec)
+    if num_colored == 0 or num_edges == 0:
+        # degenerate input: nothing constrains anything — color 1
+        # everywhere is valid under every model, and no engine program
+        # needs to run (the distributed lowering cannot even express V=0)
+        return _trivial_report(spec, num_colored, t0)
     perm = None
     if spec.ordering != "natural":
         if isinstance(g, DeviceGraph):

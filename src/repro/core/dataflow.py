@@ -52,7 +52,8 @@ class DataflowResult:
 
     @functools.cached_property
     def num_colors(self) -> int:
-        return int(self.colors.max())
+        from .metrics import num_colors as _distinct
+        return _distinct(self.colors)
 
 
 @functools.partial(jax.jit,

@@ -1,0 +1,224 @@
+"""Streaming/dynamic coloring: edge-delta batches as frontier seeds.
+
+The paper's speculation loop (§3, Alg. 2) is already an incremental repair
+mechanism — each round recolors only the conflicted vertices — and Rokos et
+al. (arXiv:1505.04086) make detect-and-recolor over the conflicted frontier
+the scalable core of the method. This module closes the loop for *streaming*
+graphs: an edge-delta batch is just another frontier seed.
+
+:class:`DynamicColoring` holds a live (graph, coloring) pair and applies
+insert/delete batches incrementally:
+
+* **deletes** only relax constraints — the coloring stays valid untouched
+  (they may leave palette gaps, which is why ``num_colors`` counts distinct
+  colors, not the max);
+* **inserts** can create monochromatic edges — exactly the paper's phase-2
+  conflicts. Their endpoints become the pending seed of a ``"recolor"``
+  run (repro.core.api.RecolorStrategy): the registered fourth strategy that
+  warm-starts the ITERATIVE round loop from (committed colors, seed mask)
+  and lets round 0 take the compacted frontier path
+  (:func:`repro.core.frontier.compact_frontier`), so a delta repair sweeps
+  the O(seed) slab instead of the O(E) edge list.
+
+Plans make repairs retrace-free: the state rides a
+:class:`repro.core.api.ColoringPlan` compiled against a headroomed
+envelope on the :func:`repro.core.graph.pad_bucket` ladder, so every delta
+batch that stays inside the envelope reuses ONE jitted program
+(``plan.traces`` stays at 1 — pinned in tests); a batch that outgrows it
+recompiles against a larger bucket (counted in ``recompiles``) and keeps
+streaming.
+
+Color quality is bounded, not exact: every color ever assigned is a mex
+over a vertex's live neighborhood, hence at most ``max_degree_seen + 1``
+(the largest max degree the stream has passed through). A fresh recoloring
+of the final graph may use fewer colors; ``repro.serve`` or the
+``stream_compare`` benchmark report the ratio.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from .api import ColoringPlan, ColoringReport, ColoringSpec, PlanShape, \
+    compile_plan, get_strategy
+from .graph import Graph, pad_bucket
+
+
+@dataclasses.dataclass
+class DeltaReport:
+    """What one :meth:`DynamicColoring.apply_batch` did.
+
+    inserted / deleted count *effective* edge changes (idempotent set
+    semantics: duplicates, self loops, inserts of present edges and
+    deletes of absent ones are no-ops). ``seed_size`` is the number of
+    vertices seeded for repair (endpoints of newly monochromatic edges);
+    ``report`` the repair's :class:`repro.core.api.ColoringReport`, or
+    ``None`` when the batch created no conflicts and the coloring stood.
+    ``wall_time_s`` covers the whole batch: host delta application,
+    conflict detection, and the (possible) device repair."""
+
+    inserted: int
+    deleted: int
+    seed_size: int
+    report: Optional[ColoringReport]
+    wall_time_s: float
+
+    @property
+    def repaired(self) -> bool:
+        return self.report is not None
+
+
+class DynamicColoring:
+    """A live colored graph under streaming edge deltas.
+
+    ``spec`` must resolve to the ``"recolor"`` strategy (the default);
+    engine / frontier / concurrency knobs compose as everywhere else. The
+    coloring model is distance-1 only — under d2/pd2 an edge delta
+    perturbs constraints beyond its endpoints, so the endpoint seed would
+    under-repair. The vertex set is fixed at construction (isolated
+    vertices are fine — size the graph for the stream).
+
+    ``edge_headroom`` / ``degree_headroom`` scale the plan envelope above
+    the current graph so delta batches stay inside one compiled program;
+    pass ``plan_shape`` to pin the envelope for a whole stream explicitly.
+
+    Invariants (asserted by the test suite):
+      * after every batch, ``colors`` is a valid coloring of ``graph``
+        under every engine backend;
+      * ``num_colors <= max_degree_seen + 1`` — every color ever assigned
+        was a mex over a live neighborhood;
+      * same-envelope batches never retrace (``plan.traces`` stays 1).
+    """
+
+    def __init__(self, graph: Graph, spec: Optional[ColoringSpec] = None,
+                 *, edge_headroom: float = 1.5,
+                 degree_headroom: float = 1.5,
+                 plan_shape: Optional[PlanShape] = None):
+        spec = ColoringSpec(strategy="recolor") if spec is None else spec
+        if get_strategy(spec.strategy).name != "recolor":
+            raise ValueError(
+                "DynamicColoring needs the 'recolor' strategy (got "
+                f"{spec.strategy!r}); other strategies have no warm start")
+        if spec.model != "d1":
+            raise ValueError(
+                "DynamicColoring is distance-1 only: under d2/pd2 an edge "
+                "delta perturbs constraints beyond its endpoints, so the "
+                "endpoint seed would under-repair")
+        if spec.ordering != "natural":
+            raise ValueError("DynamicColoring repairs in place; ordering "
+                             "must be 'natural'")
+        self.spec = spec
+        self._graph = graph
+        self._edge_headroom = float(edge_headroom)
+        self._degree_headroom = float(degree_headroom)
+        self._pinned_shape = plan_shape
+        self.recompiles = 0
+        self.max_degree_seen = graph.max_degree()
+        self._plan = self._compile(plan_shape or self._envelope(graph))
+        # the cold start: no colors, everything pending — the same compiled
+        # program later delta repairs reuse (zero retrace)
+        self._colors = np.asarray(self._plan(graph).colors)
+
+    # -------------------------------------------------------------- plumbing
+    def _envelope(self, graph: Graph) -> PlanShape:
+        """Headroomed envelope on the pad_bucket ladder: deltas that stay
+        inside it ride one compiled program. The edge floor (one minimum
+        bucket) lets a stream start from a sparse — even empty — graph
+        without an immediate recompile."""
+        e = max(int(graph.num_directed_edges * self._edge_headroom), 1)
+        d = graph.max_degree()
+        return PlanShape(
+            num_vertices=graph.num_vertices,
+            padded_edges=pad_bucket(e),
+            max_degree=max(int(d * self._degree_headroom), d + 2, 8))
+
+    def _compile(self, shape: PlanShape) -> ColoringPlan:
+        return compile_plan(self.spec, shape)
+
+    def _ensure_envelope(self, graph: Graph) -> None:
+        st = self._plan.statics
+        if (graph.num_directed_edges <= st.padded_edges
+                and graph.max_degree() <= st.max_degree):
+            return
+        if self._pinned_shape is not None:
+            raise ValueError(
+                f"stream outgrew the pinned plan envelope {st}: graph has "
+                f"{graph.num_directed_edges} directed edges / max degree "
+                f"{graph.max_degree()}; construct with a larger plan_shape "
+                "or let DynamicColoring manage the envelope")
+        self._plan = self._compile(self._envelope(graph))
+        self.recompiles += 1
+
+    # ------------------------------------------------------------ the state
+    @property
+    def graph(self) -> Graph:
+        return self._graph
+
+    @property
+    def colors(self) -> np.ndarray:
+        return self._colors
+
+    @property
+    def plan(self) -> ColoringPlan:
+        return self._plan
+
+    @property
+    def num_colors(self) -> int:
+        from .metrics import num_colors
+        return num_colors(self._colors)
+
+    @property
+    def color_bound(self) -> int:
+        """The provable palette bound: every color ever assigned was a mex
+        over a live neighborhood, so ``<= max_degree_seen + 1``."""
+        return self.max_degree_seen + 1
+
+    # ------------------------------------------------------------ the delta
+    def apply_batch(self, inserts=None, deletes=None) -> DeltaReport:
+        """Apply one edge-delta batch and repair the coloring incrementally.
+
+        ``inserts`` / ``deletes`` are [M, 2] endpoint arrays (either
+        orientation; duplicates/self-loops/no-ops welcome — set
+        semantics, deletes first). Only the endpoints of *newly
+        monochromatic* edges are recolored; a conflict-free batch leaves
+        every color untouched."""
+        t0 = time.perf_counter()
+        old = self._graph
+        new_graph, new_pairs, n_del = old.delta_info(inserts, deletes)
+
+        # genuinely-new inserts: absent before — their monochromatic
+        # endpoints are the repair seed
+        seed = np.zeros(old.num_vertices, np.bool_)
+        if new_pairs.shape[0]:
+            u, v = new_pairs[:, 0], new_pairs[:, 1]
+            conf = self._colors[u] == self._colors[v]
+            seed[u[conf]] = True
+            seed[v[conf]] = True
+        seed_size = int(seed.sum())
+
+        # nothing commits until the whole batch succeeds: a pinned-envelope
+        # overflow (raises here) or a repair that fails to converge (raises
+        # in the plan call) leaves graph/colors/max_degree_seen still
+        # agreeing, so a caller can catch, resize/relax and retry the batch
+        self._ensure_envelope(new_graph)
+        report = None
+        if seed_size:
+            report = self._plan(new_graph, colors=self._colors, seed=seed)
+        self._graph = new_graph
+        self.max_degree_seen = max(self.max_degree_seen,
+                                   new_graph.max_degree())
+        if report is not None:
+            self._colors = np.asarray(report.colors)
+        return DeltaReport(inserted=int(new_pairs.shape[0]), deleted=n_del,
+                           seed_size=seed_size, report=report,
+                           wall_time_s=time.perf_counter() - t0)
+
+    def recolor_full(self) -> ColoringReport:
+        """Recolor the current graph from scratch through the same plan
+        (palette compaction: drops the accumulated streaming gaps)."""
+        report = self._plan(self._graph)
+        self._colors = np.asarray(report.colors)
+        return report

@@ -58,7 +58,11 @@ def frontier_capacities(num_vertices: int, padded_edges: int,
     so plan envelopes stay quantized. ``capacity`` overrides the vertex
     capacity (the ``ColoringSpec.frontier_capacity`` knob); the edge slab
     scales with it. All inputs are static envelope values — same envelope,
-    same capacities, zero retrace."""
+    same capacities, zero retrace. A degenerate envelope (V=0 or E=0) has
+    nothing to compact and gets ``(0, 0)`` — frontier disabled — instead
+    of a phantom minimum-bucket slab."""
+    if int(num_vertices) <= 0 or int(padded_edges) <= 0:
+        return 0, 0
     V = max(1, int(num_vertices))
     E = max(1, int(padded_edges))
     cap_v = int(capacity) if capacity > 0 else max(64, V // 32)

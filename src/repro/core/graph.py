@@ -41,7 +41,8 @@ _LAYOUTS = ("edges", "csr", "ell")
 def pad_bucket(n: int, *, min_bucket: int = 256) -> int:
     """Round ``n`` up to the shape-bucket grid: multiples of ``2^(k-3)``
     within ``(2^(k-1), 2^k]`` (eighth-of-an-octave steps), floored at
-    ``min_bucket``.
+    ``min_bucket`` for positive ``n``. ``n <= 0`` returns 0 — a degenerate
+    (vertexless/edgeless) graph must not allocate a phantom slab.
 
     Padding waste stays at most 25% (typically a few percent) while the
     number of distinct shapes per size decade stays in the tens — the
@@ -49,6 +50,8 @@ def pad_bucket(n: int, *, min_bucket: int = 256) -> int:
     "same bucket => zero retrace" achievable for real graph families, where
     raw edge counts almost never repeat exactly."""
     n = int(n)
+    if n <= 0:
+        return 0
     if n <= min_bucket:
         return int(min_bucket)
     k = (n - 1).bit_length()
@@ -142,6 +145,119 @@ class Graph:
             np.diff(self.row_ptr).astype(np.int64),
         )
         return src, self.col_idx.astype(np.int32)
+
+    def undirected_edges(self) -> np.ndarray:
+        """The canonical undirected edge set: [E, 2] int32 with u < v, in
+        lexicographic order (CSR order restricted to the lower direction)."""
+        src, dst = self.directed_edges()
+        half = src < dst
+        return np.stack([src[half], dst[half]], 1)
+
+    def _edge_keys(self, u: np.ndarray, v: np.ndarray) -> np.ndarray:
+        """Dense int64 key of canonical (u < v) pairs — u*V+v stays below
+        2^63 for any int32 vertex count, so no overflow."""
+        return u.astype(np.int64) * np.int64(self.num_vertices) \
+            + v.astype(np.int64)
+
+    @staticmethod
+    def _member_mask(sorted_keys: np.ndarray, keys: np.ndarray) -> np.ndarray:
+        """[M] bool: which ``keys`` occur in ``sorted_keys`` (one
+        searchsorted probe — the shared membership primitive of
+        :meth:`has_edges` and :meth:`delta_info`)."""
+        pos = np.searchsorted(sorted_keys, keys)
+        hit = np.zeros(keys.shape[0], np.bool_)
+        ok = pos < sorted_keys.shape[0]
+        hit[ok] = sorted_keys[pos[ok]] == keys[ok]
+        return hit
+
+    @staticmethod
+    def _canonical_pairs(edges, num_vertices: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Normalize an [M, 2] endpoint array: orient u < v, drop self
+        loops, reject out-of-range ids. Duplicates are kept (callers dedup
+        where it matters)."""
+        edges = np.asarray(edges)
+        if edges.size == 0:
+            z = np.zeros(0, np.int32)
+            return z, z.copy()
+        edges = edges.reshape(-1, 2)
+        a = edges[:, 0].astype(np.int64)
+        b = edges[:, 1].astype(np.int64)
+        if a.size and (min(a.min(), b.min()) < 0
+                       or max(a.max(), b.max()) >= num_vertices):
+            raise ValueError("delta edge endpoint out of range "
+                             f"[0, {num_vertices})")
+        u = np.minimum(a, b)
+        v = np.maximum(a, b)
+        keep = u != v
+        return u[keep].astype(np.int32), v[keep].astype(np.int32)
+
+    def has_edges(self, edges) -> np.ndarray:
+        """[M] bool membership mask for candidate undirected edges ([M, 2]
+        endpoints, either orientation; self loops are never present)."""
+        u, v = self._canonical_pairs(edges, self.num_vertices)
+        base = self.undirected_edges()
+        base_keys = self._edge_keys(base[:, 0], base[:, 1])  # sorted (CSR)
+        hit = self._member_mask(base_keys, self._edge_keys(u, v))
+        # re-expand to the caller's (possibly self-looped) row count
+        edges = np.asarray(edges)
+        if edges.size == 0:
+            return np.zeros(0, np.bool_)
+        edges = edges.reshape(-1, 2)
+        out = np.zeros(edges.shape[0], np.bool_)
+        out[edges[:, 0] != edges[:, 1]] = hit
+        return out
+
+    def delta_info(self, inserts=None, deletes=None
+                   ) -> Tuple["Graph", np.ndarray, int]:
+        """Apply an undirected edge delta and report what changed:
+        ``(new_graph, added_pairs, num_deleted)`` where ``added_pairs``
+        is the [M, 2] canonical (u < v) set of *genuinely new* edges —
+        absent before, present after — and ``num_deleted`` the count of
+        genuinely removed ones.
+
+        Delta semantics are idempotent set operations: duplicate rows,
+        self loops, inserts of present edges and deletes of absent edges
+        are all no-ops; an edge appearing in both lists ends PRESENT
+        (deletes apply first, then inserts). The vertex set is fixed —
+        streaming updates keep every shape envelope keyed on |V| intact.
+        One O(E) pass over the current edge set serves the membership
+        check, the delete filter and the rebuild (the streaming layer's
+        per-batch host cost)."""
+        V = self.num_vertices
+        base = self.undirected_edges()
+        base_keys = self._edge_keys(base[:, 0], base[:, 1])  # sorted (CSR)
+
+        ins_pairs = np.zeros((0, 2), np.int32)
+        ins_keys = np.zeros(0, np.int64)
+        if inserts is not None:
+            iu, iv = self._canonical_pairs(inserts, V)
+            if iu.size:
+                ins_pairs = np.unique(np.stack([iu, iv], 1), axis=0)
+                ins_keys = self._edge_keys(ins_pairs[:, 0], ins_pairs[:, 1])
+
+        keep = np.ones(base_keys.shape[0], np.bool_)
+        if deletes is not None:
+            du, dv = self._canonical_pairs(deletes, V)
+            if du.size:
+                del_keys = self._edge_keys(du, dv)
+                if ins_keys.size:
+                    # deletes first, then inserts: an edge in both lists
+                    # ends present (and is never "new")
+                    del_keys = del_keys[~np.isin(del_keys, ins_keys)]
+                keep &= ~np.isin(base_keys, del_keys)
+
+        new_pairs = ins_pairs
+        if ins_keys.size:
+            new_pairs = ins_pairs[~self._member_mask(base_keys, ins_keys)]
+        new_graph = Graph.from_edges(
+            V, np.concatenate([base[keep], new_pairs]))
+        return new_graph, new_pairs, int((~keep).sum())
+
+    def apply_delta(self, inserts=None, deletes=None) -> "Graph":
+        """A new :class:`Graph` with ``inserts`` added and ``deletes``
+        removed — :meth:`delta_info`'s graph, when the change report is
+        not needed (same idempotent set semantics)."""
+        return self.delta_info(inserts, deletes)[0]
 
     def relabel(self, perm: np.ndarray) -> "Graph":
         """Relabel vertices: new id of old vertex i is ``perm[i]``."""

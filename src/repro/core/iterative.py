@@ -79,17 +79,28 @@ class ColoringResult:
 
     @functools.cached_property
     def num_colors(self) -> int:
-        return int(self.colors.max())
+        from .metrics import num_colors as _distinct
+        return _distinct(self.colors)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("concurrency", "max_rounds", "max_sweeps", "backend",
-                     "color_bound", "frontier_cap_v", "frontier_cap_e"),
+                     "color_bound", "frontier_cap_v", "frontier_cap_e",
+                     "seed_frontier"),
 )
-def _iterative_impl(g: DeviceGraph, *, concurrency: int, max_rounds: int,
+def _iterative_impl(g: DeviceGraph, colors0=None, pending0=None, *,
+                    concurrency: int, max_rounds: int,
                     max_sweeps: int, backend, color_bound: int = 0,
-                    frontier_cap_v: int = 0, frontier_cap_e: int = 0):
+                    frontier_cap_v: int = 0, frontier_cap_e: int = 0,
+                    seed_frontier: bool = False):
+    """The speculation round loop. ``colors0``/``pending0`` warm-start it
+    from an existing partial coloring (the ``"recolor"`` strategy's
+    detect-and-repair entry: committed colors + the conflicted seed set);
+    ``None`` is the cold start (no colors, everything pending).
+    ``seed_frontier`` lets round 0 take the compacted frontier path — off
+    for cold starts (round 0 is all-pending by construction), on for
+    seeded repairs, where round 0 IS the tiny conflicted tail."""
     V = g.num_vertices
     src, dst = g.src, g.dst
     max_colors = g.max_degree + 1
@@ -153,7 +164,8 @@ def _iterative_impl(g: DeviceGraph, *, concurrency: int, max_rounds: int,
 
         if use_frontier:
             nv, ne = frontier_counts(pending, g.inc_ptr)
-            fits = ((rnd > 0) & (nv <= frontier_cap_v)
+            round_ok = jnp.asarray(True) if seed_frontier else (rnd > 0)
+            fits = (round_ok & (nv <= frontier_cap_v)
                     & (ne <= frontier_cap_e))
             colors, n_sweeps, new_pending = lax.cond(
                 fits, frontier_round, full_round, colors)
@@ -170,8 +182,10 @@ def _iterative_impl(g: DeviceGraph, *, concurrency: int, max_rounds: int,
         return jnp.logical_and(jnp.any(pending), rnd < max_rounds)
 
     init = (
-        jnp.zeros((V,), jnp.int32),
-        jnp.ones((V,), jnp.bool_),
+        (jnp.zeros((V,), jnp.int32) if colors0 is None
+         else jnp.asarray(colors0, jnp.int32)),
+        (jnp.ones((V,), jnp.bool_) if pending0 is None
+         else jnp.asarray(pending0, jnp.bool_)),
         jnp.asarray(0, jnp.int32),
         jnp.zeros((max_rounds,), jnp.int32),
         jnp.zeros((max_rounds,), jnp.int32),

@@ -24,8 +24,16 @@ def count_conflicts(graph: Graph, colors: np.ndarray) -> int:
 
 
 def num_colors(colors) -> int:
+    """Number of *distinct* positive colors in use.
+
+    Not ``colors.max()``: repair paths (the ``"recolor"`` strategy, edge
+    deletions freeing colors) legitimately leave gaps in the palette, and
+    the max would overstate it. For a fresh first-fit coloring the two
+    agree; for a patched one only the distinct count is the palette size."""
     colors = np.asarray(colors)
-    return int(colors.max()) if colors.size else 0
+    if not colors.size:
+        return 0
+    return int(np.unique(colors[colors > 0]).size)
 
 
 # ------------------------------------------------------------- D2 / PD2

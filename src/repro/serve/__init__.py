@@ -1,13 +1,31 @@
 """Serving layer.
 
-The family-dispatched cache/decode primitives live in ``repro.models``
-(`cache_spec`, `init_cache`, `decode_step`, `forward(..., caches=)`) so each
-architecture's cache layout sits next to its math; this package re-exports
-them as the serving API and hosts the batched driver (`repro.launch.serve`).
-Cache sharding (sequence-sharded KV with LSE-combine collectives, ring
-buffers for local attention, O(1) recurrent states) is documented in
-DESIGN.md §6.
+Two lanes:
+
+* **Coloring service** (``repro.serve.coloring``): a batched coloring
+  server over the spec/plan front door — LRU cache of compiled
+  :class:`repro.core.api.ColoringPlan`s keyed by ``(spec, PlanShape)``
+  bucket envelope, vmapped micro-batching of same-bucket requests, and
+  latency/throughput stats. CLI smoke:
+  ``PYTHONPATH=src python -m repro.serve.coloring --smoke``.
+* **LM serving**: the family-dispatched cache/decode primitives live in
+  ``repro.models`` (`cache_spec`, `init_cache`, `decode_step`,
+  `forward(..., caches=)`) so each architecture's cache layout sits next
+  to its math; this package re-exports them as the serving API and hosts
+  the batched driver (`repro.launch.serve`). Cache sharding
+  (sequence-sharded KV with LSE-combine collectives, ring buffers for
+  local attention, O(1) recurrent states) is documented in DESIGN.md §6.
 """
 from ..models import cache_spec, init_cache, decode_step, forward
 
-__all__ = ["cache_spec", "init_cache", "decode_step", "forward"]
+__all__ = ["cache_spec", "init_cache", "decode_step", "forward",
+           "ColoringService", "ServedReport"]
+
+
+def __getattr__(name):
+    # lazy (PEP 562): keeps `python -m repro.serve.coloring` free of the
+    # runpy double-import warning and the package import light
+    if name in ("ColoringService", "ServedReport"):
+        from . import coloring
+        return getattr(coloring, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

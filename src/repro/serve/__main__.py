@@ -1,0 +1,6 @@
+"""``python -m repro.serve`` — the coloring-service CLI smoke
+(repro.serve.coloring.main)."""
+from .coloring import main
+
+if __name__ == "__main__":
+    main()

@@ -213,7 +213,8 @@ if HAVE_HYPOTHESIS:
 
 # ------------------------------------------------------- plans: reuse, map
 def test_pad_bucket_grid():
-    assert pad_bucket(0) == 256
+    assert pad_bucket(0) == 0   # degenerate: no phantom minimum bucket
+    assert pad_bucket(1) == 256
     assert pad_bucket(256) == 256
     assert pad_bucket(257) == 320  # step 2^6 inside the (256, 512] octave
     for n in [300, 1000, 5000, 123456]:

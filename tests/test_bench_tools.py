@@ -1,0 +1,81 @@
+"""Tools-level tests for the benchmark harness (benchmarks/run.py):
+the per-family atomic JSON flush — a crashing family must never lose the
+rows already produced by completed families — and the family registry's
+CLI surface staying in sync."""
+import importlib.util
+import json
+import os
+import sys
+
+import pytest
+
+
+def _load_run():
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "run.py")
+    spec = importlib.util.spec_from_file_location("bench_run", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture()
+def bench():
+    mod = _load_run()
+    yield mod
+    sys.modules.pop("bench_run", None)
+
+
+class _Args:
+    scale = None
+    ell = False
+    json = None
+
+
+def test_json_flushes_per_family(bench, tmp_path, monkeypatch):
+    """One crashing family loses only its own rows: the artifact on disk
+    holds every completed family's rows, written atomically."""
+    out = tmp_path / "bench.json"
+
+    def fam_ok(args, scale):
+        bench._row("ok/row", 1.0, "d=1", extra=7)
+
+    def fam_boom(args, scale):
+        bench._row("boom/partial", 2.0, "d=2")
+        raise RuntimeError("family crashed mid-run")
+
+    monkeypatch.setattr(bench, "FAMILIES", {
+        "fam_ok": (fam_ok, 1), "fam_boom": (fam_boom, 1)})
+    with pytest.raises(RuntimeError, match="crashed"):
+        bench.run_families(["fam_ok", "fam_boom"], _Args(),
+                           json_path=str(out))
+    payload = json.loads(out.read_text())
+    assert payload["families"] == ["fam_ok"]  # completed families only
+    names = [r["name"] for r in payload["rows"]]
+    assert "ok/row" in names
+    assert payload["rows"][0]["extra"] == 7
+    assert not os.path.exists(str(out) + ".tmp")  # rename, not partial write
+
+
+def test_json_flush_is_atomic_rewrite(bench, tmp_path):
+    out = tmp_path / "bench.json"
+
+    def fam(n):
+        def run(args, scale):
+            bench._row(f"f{n}/row", float(n), f"d={n}")
+        return run
+
+    bench.FAMILIES = {"a": (fam(1), 1), "b": (fam(2), 1)}
+    bench.run_families(["a", "b"], _Args(), json_path=str(out))
+    payload = json.loads(out.read_text())
+    assert payload["families"] == ["a", "b"]
+    assert len(payload["rows"]) == 2
+    assert payload["schema"] == 1
+
+
+def test_stream_compare_registered(bench):
+    assert "stream_compare" in bench.FAMILIES
+    assert bench.FAMILIES["stream_compare"][1] == 10
+    # the module docstring table and the registry can't drift silently
+    for fam in bench.FAMILIES:
+        assert fam in bench.__doc__

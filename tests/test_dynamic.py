@@ -1,0 +1,382 @@
+"""Streaming/dynamic-coloring tests (repro.core.dynamic + the ``"recolor"``
+strategy): incremental repairs stay valid under every engine, same-envelope
+delta batches never retrace, cold-start recolor is bit-identical to
+ITERATIVE, palette counting survives deletion gaps (the ``num_colors``
+distinct-count bugfix), degenerate (V=0 / E=0) graphs flow through every
+strategy without phantom slabs, and a hypothesis property drives random
+delta sequences against a fresh coloring of the final graph."""
+import numpy as np
+import pytest
+
+from repro.core import (ColoringSpec, DynamicColoring, Graph, PlanShape,
+                        color, compile_plan, num_colors, rmat,
+                        validate_coloring)
+from repro.core.frontier import frontier_capacities
+from repro.core.graph import pad_bucket
+
+ENGINES = ["sort", "bitmap"]
+STRATEGIES = ["iterative", "dataflow", "distributed", "recolor"]
+
+
+def _graph(name="RMAT-G", scale=8, seed=0):
+    return rmat.paper_graph(name, scale=scale, seed=seed)
+
+
+def _delta(rng, g, n_ins, n_del):
+    V = g.num_vertices
+    ins = np.stack([rng.integers(0, V, n_ins),
+                    rng.integers(0, V, n_ins)], 1)
+    cur = g.undirected_edges()
+    dels = (cur[rng.integers(0, cur.shape[0], n_del)]
+            if cur.shape[0] else None)
+    return ins, dels
+
+
+# ----------------------------------------------------------- graph deltas
+def test_apply_delta_set_semantics():
+    g = Graph.from_edges(6, np.array([[0, 1], [1, 2], [2, 3]]))
+    # duplicate + reversed inserts, self loop, no-op delete, real delete
+    g2 = g.apply_delta(inserts=[[3, 4], [4, 3], [5, 5], [0, 1]],
+                       deletes=[[1, 2], [2, 1], [0, 5]])
+    got = set(map(tuple, g2.undirected_edges()))
+    assert got == {(0, 1), (2, 3), (3, 4)}
+    # an edge in both lists ends present (deletes first, then inserts)
+    g3 = g.apply_delta(inserts=[[0, 1]], deletes=[[0, 1]])
+    assert (0, 1) in set(map(tuple, g3.undirected_edges()))
+    with pytest.raises(ValueError):
+        g.apply_delta(inserts=[[0, 6]])
+
+
+def test_has_edges_membership():
+    g = Graph.from_edges(5, np.array([[0, 1], [2, 3]]))
+    mask = g.has_edges([[1, 0], [0, 2], [3, 2], [4, 4]])
+    assert mask.tolist() == [True, False, True, False]
+    assert g.has_edges(np.zeros((0, 2), np.int64)).shape == (0,)
+
+
+# ------------------------------------------------------ recolor strategy
+@pytest.mark.parametrize("engine", ENGINES)
+def test_cold_recolor_equals_iterative(engine):
+    """With no warm start the recolor strategy IS iterative — bit parity
+    across the report."""
+    g = _graph()
+    a = color(g, ColoringSpec(strategy="iterative", engine=engine,
+                              concurrency=16))
+    b = color(g, ColoringSpec(strategy="recolor", engine=engine,
+                              concurrency=16))
+    np.testing.assert_array_equal(a.colors, b.colors)
+    assert a.rounds == b.rounds
+    np.testing.assert_array_equal(a.conflicts_per_round,
+                                  b.conflicts_per_round)
+
+
+def test_recolor_plan_state_validation():
+    g = _graph()
+    plan = compile_plan(ColoringSpec(strategy="recolor"), g)
+    with pytest.raises(ValueError, match="colors shape"):
+        plan(g, colors=np.zeros(3, np.int32))
+    with pytest.raises(ValueError, match="seed shape"):
+        plan(g, seed=np.zeros(3, bool))
+    # stateless strategies reject runtime kwargs outright
+    it_plan = compile_plan(ColoringSpec(strategy="iterative"), g)
+    with pytest.raises(TypeError, match="no per-call state"):
+        it_plan(g, colors=np.zeros(g.num_vertices, np.int32))
+    # recolor repairs in place: a WARM start needs natural ordering, but a
+    # cold start (no state) is ordering-invariant and must keep working
+    ord_plan = compile_plan(
+        ColoringSpec(strategy="recolor", ordering="largest_first"), g)
+    with pytest.raises(ValueError, match="natural"):
+        ord_plan(g, colors=np.ones(g.num_vertices, np.int32))
+    assert validate_coloring(g, ord_plan(g).colors)
+
+
+def test_recolor_repairs_only_the_seed():
+    """A warm start with a valid coloring and a seeded subset recolors the
+    seed and leaves everything else untouched."""
+    g = _graph()
+    base = color(g, ColoringSpec(strategy="iterative", concurrency=16))
+    assert validate_coloring(g, base.colors)
+    plan = compile_plan(ColoringSpec(strategy="recolor", concurrency=16), g)
+    seed = np.zeros(g.num_vertices, bool)
+    seed[:5] = True
+    rep = plan(g, colors=base.colors, seed=seed)
+    assert validate_coloring(g, rep.colors)
+    np.testing.assert_array_equal(rep.colors[~seed], base.colors[~seed])
+    # empty seed: nothing pending, colors pass through bit-identically
+    rep0 = plan(g, colors=base.colors,
+                seed=np.zeros(g.num_vertices, bool))
+    np.testing.assert_array_equal(rep0.colors, base.colors)
+    assert rep0.rounds == 0
+
+
+# ------------------------------------------------------- dynamic coloring
+@pytest.mark.parametrize("engine", ENGINES + ["ell_pallas"])
+def test_dynamic_stream_valid_and_zero_retrace(engine):
+    """The tentpole invariants: every delta batch leaves a valid coloring,
+    within the provable palette bound, with plan.traces pinned at 1
+    (same-envelope repairs never retrace)."""
+    g = _graph(scale=8)
+    dyn = DynamicColoring(g, ColoringSpec(strategy="recolor", engine=engine,
+                                          concurrency=32))
+    assert validate_coloring(dyn.graph, dyn.colors)
+    rng = np.random.default_rng(1)
+    for _ in range(6):
+        ins, dels = _delta(rng, dyn.graph, 30, 25)
+        dr = dyn.apply_batch(inserts=ins, deletes=dels)
+        assert validate_coloring(dyn.graph, dyn.colors)
+        # the bound holds on color VALUES, not just the distinct count
+        assert int(dyn.colors.max()) <= dyn.color_bound
+        assert dyn.num_colors <= dyn.color_bound
+        assert dr.seed_size >= 0
+    assert dyn.plan.traces == 1
+    assert dyn.recompiles == 0
+
+
+def test_dynamic_delete_only_keeps_colors():
+    """Deletes only relax constraints: no repair runs, colors unchanged."""
+    g = _graph(scale=8)
+    dyn = DynamicColoring(g)
+    before = dyn.colors.copy()
+    cur = dyn.graph.undirected_edges()
+    dr = dyn.apply_batch(deletes=cur[:40])
+    assert not dr.repaired and dr.report is None
+    assert dr.deleted == 40
+    np.testing.assert_array_equal(dyn.colors, before)
+    assert validate_coloring(dyn.graph, dyn.colors)
+
+
+def test_dynamic_noop_and_duplicate_deltas():
+    g = _graph(scale=8)
+    dyn = DynamicColoring(g)
+    before = dyn.colors.copy()
+    e = dyn.graph.undirected_edges()[0]
+    dr = dyn.apply_batch(inserts=[e, e, [e[1], e[0]], [0, 0]],
+                         deletes=[[e[0], e[0]]])
+    assert dr.inserted == 0 and dr.deleted == 0 and dr.seed_size == 0
+    np.testing.assert_array_equal(dyn.colors, before)
+
+
+def test_dynamic_envelope_growth_recompiles():
+    """A batch that outgrows the plan envelope recompiles against a larger
+    bucket and keeps streaming; a pinned envelope raises instead."""
+    g = Graph.from_edges(64, np.array([[i, i + 1] for i in range(40)]))
+    dyn = DynamicColoring(g, edge_headroom=1.05)
+    st0 = dyn.plan.statics
+    rng = np.random.default_rng(0)
+    # grow a hub well past the degree bound (and the edge bucket floor
+    # absorbs edge growth, so degree drives the recompile)
+    hub = np.stack([np.zeros(40, np.int64), 8 + np.arange(40) % 56], 1)
+    dyn.apply_batch(inserts=hub)
+    extra = np.stack([rng.integers(0, 64, 600), rng.integers(0, 64, 600)], 1)
+    dyn.apply_batch(inserts=extra)
+    assert dyn.recompiles >= 1
+    assert dyn.plan.statics != st0
+    assert validate_coloring(dyn.graph, dyn.colors)
+
+    pinned = DynamicColoring(g, plan_shape=PlanShape(
+        num_vertices=64, padded_edges=pad_bucket(g.num_directed_edges),
+        max_degree=g.max_degree() + 2))
+    graph_before, colors_before = pinned.graph, pinned.colors.copy()
+    with pytest.raises(ValueError, match="outgrew the pinned"):
+        pinned.apply_batch(inserts=extra)
+    # the raise leaves the state UNTOUCHED (graph and colors still agree),
+    # so the caller can catch, resize and retry the same batch
+    assert pinned.graph is graph_before
+    np.testing.assert_array_equal(pinned.colors, colors_before)
+    assert validate_coloring(pinned.graph, pinned.colors)
+
+
+def test_dynamic_failed_repair_rolls_back():
+    """A repair that raises (e.g. non-convergence inside the plan call)
+    leaves the state UNTOUCHED — graph and colors still agree, so the
+    caller can relax the spec and retry instead of streaming on with a
+    silently invalid pair."""
+    dyn = DynamicColoring(_graph(scale=7))
+    graph_before, colors_before = dyn.graph, dyn.colors.copy()
+
+    class BoomPlan:  # statics intact (the envelope check runs first),
+        statics = dyn.plan.statics  # the repair call itself fails
+
+        def __call__(self, *a, **k):
+            raise RuntimeError("did not converge")
+
+    dyn._plan = BoomPlan()
+    # same color => non-adjacent (the coloring is valid), so inserting the
+    # edge genuinely seeds a repair
+    vals, counts = np.unique(colors_before, return_counts=True)
+    u, v = np.where(colors_before == vals[np.argmax(counts)])[0][:2]
+    with pytest.raises(RuntimeError, match="converge"):
+        dyn.apply_batch(inserts=[[int(u), int(v)]])
+    assert dyn.graph is graph_before
+    np.testing.assert_array_equal(dyn.colors, colors_before)
+    assert validate_coloring(dyn.graph, dyn.colors)
+
+
+def test_degenerate_plan_preserves_warm_start_colors():
+    """A recolor plan over an edgeless envelope must not clobber the
+    caller's committed colors with the trivial all-ones report."""
+    ge = Graph.from_edges(5, np.zeros((0, 2), np.int64))
+    plan = compile_plan(ColoringSpec(strategy="recolor"), ge)
+    prev = np.array([5, 7, 5, 2, 9], np.int32)
+    rep = plan(ge, colors=prev, seed=np.zeros(5, bool))
+    np.testing.assert_array_equal(rep.colors, prev)
+    # uncolored slots still get the trivial color 1
+    rep2 = plan(ge, colors=np.array([3, 0, 0, 0, 4], np.int32))
+    np.testing.assert_array_equal(rep2.colors, [3, 1, 1, 1, 4])
+
+
+def test_dynamic_from_empty_graph():
+    """Streaming can start from an edgeless graph (regression: the old
+    pad_bucket(0)=256 phantom slab came exactly from this shape)."""
+    dyn = DynamicColoring(Graph.from_edges(16, np.zeros((0, 2), np.int64)))
+    assert np.all(dyn.colors == 1)
+    dr = dyn.apply_batch(inserts=[[0, 1], [1, 2], [0, 2]])
+    assert dr.inserted == 3
+    assert validate_coloring(dyn.graph, dyn.colors)
+    assert dyn.num_colors == 3
+
+
+def test_config_dynamic_spec():
+    """ColoringConfig.to_dynamic_spec: a recolor spec for d1 configs, a
+    hard error (not a silent d1 coercion) for d2/pd2 ones."""
+    import dataclasses
+    from repro.configs.rmat_coloring import get_smoke_config
+    spec = get_smoke_config().to_dynamic_spec()
+    assert spec.strategy == "recolor" and spec.model == "d1"
+    with pytest.raises(ValueError, match="distance-1"):
+        dataclasses.replace(get_smoke_config(), model="d2").to_dynamic_spec()
+
+
+def test_dynamic_rejects_wrong_spec():
+    g = _graph(scale=8)
+    with pytest.raises(ValueError, match="recolor"):
+        DynamicColoring(g, ColoringSpec(strategy="iterative"))
+    with pytest.raises(ValueError, match="distance-1"):
+        DynamicColoring(g, ColoringSpec(strategy="recolor", model="d2"))
+    with pytest.raises(ValueError, match="natural"):
+        DynamicColoring(g, ColoringSpec(strategy="recolor",
+                                        ordering="random"))
+
+
+# --------------------------------------------- num_colors distinct count
+def test_num_colors_counts_distinct_not_max():
+    """The metrics bugfix: a freed color leaves a palette gap; the count
+    must be distinct positive colors, not colors.max()."""
+    assert num_colors(np.array([1, 3, 3, 7])) == 3  # gaps at 2, 4-6
+    assert num_colors(np.zeros(0, np.int32)) == 0
+    assert num_colors(np.array([5])) == 1
+
+
+def test_report_num_colors_distinct_under_recolor():
+    """Pin: ColoringReport.num_colors == the distinct count under the
+    recolor strategy, where deletes/repairs legitimately leave gaps."""
+    g = _graph(scale=8)
+    dyn = DynamicColoring(g, ColoringSpec(strategy="recolor",
+                                          concurrency=32))
+    rng = np.random.default_rng(3)
+    last = None
+    for _ in range(8):
+        ins, dels = _delta(rng, dyn.graph, 40, 60)
+        dr = dyn.apply_batch(inserts=ins, deletes=dels)
+        if dr.report is not None:
+            last = dr.report
+    assert last is not None, "stream produced no repair — widen the deltas"
+    distinct = int(np.unique(last.colors[last.colors > 0]).size)
+    assert last.num_colors == distinct == num_colors(last.colors)
+    assert dyn.num_colors == num_colors(dyn.colors)
+
+
+# ------------------------------------------- degenerate graph regressions
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_degenerate_graphs_all_strategies(strategy):
+    """Regression (pad_bucket(0) phantom slabs): V=0 and E=0 graphs flow
+    through color() AND compile_plan() for every strategy — no crash,
+    trivially-valid report, no phantom padding."""
+    g0 = Graph.from_edges(0, np.zeros((0, 2), np.int64))
+    ge = Graph.from_edges(7, np.zeros((0, 2), np.int64))
+    spec = ColoringSpec(strategy=strategy, concurrency=4)
+    for g in (g0, ge):
+        for rep in (color(g, spec), compile_plan(spec, g)(g)):
+            assert rep.colors.shape == (g.num_vertices,)
+            assert np.all(rep.colors == 1)
+            assert rep.rounds == 0
+            assert validate_coloring(g, rep.colors) or g.num_vertices == 0
+            assert rep.num_colors == (1 if g.num_vertices else 0)
+
+
+def test_degenerate_pad_bucket_and_capacities():
+    assert pad_bucket(0) == 0
+    assert frontier_capacities(0, 0) == (0, 0)
+    assert frontier_capacities(100, 0) == (0, 0)
+    assert frontier_capacities(0, 100) == (0, 0)
+    # a degenerate envelope never allocates edge padding
+    ge = Graph.from_edges(7, np.zeros((0, 2), np.int64))
+    plan = compile_plan(ColoringSpec(), ge)
+    assert plan.statics.padded_edges == 0
+
+
+def test_degenerate_plan_map():
+    ge = Graph.from_edges(7, np.zeros((0, 2), np.int64))
+    plan = compile_plan(ColoringSpec(strategy="dataflow"), ge)
+    reps = plan.map([ge, ge])
+    assert len(reps) == 2
+    for rep in reps:
+        assert np.all(rep.colors == 1)
+
+
+# --------------------------------------------------- hypothesis property
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - hypothesis is in requirements.txt
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def delta_streams(draw, max_v=20, max_e=60, max_batches=4):
+        n = draw(st.integers(2, max_v))
+        m = draw(st.integers(0, max_e))
+        edges = draw(st.lists(
+            st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+            min_size=m, max_size=m))
+        batches = []
+        for _ in range(draw(st.integers(1, max_batches))):
+            k_i = draw(st.integers(0, 25))
+            k_d = draw(st.integers(0, 25))
+            # deliberately includes self loops, duplicates, inserts of
+            # present edges and deletes of absent ones — all no-ops
+            ins = draw(st.lists(
+                st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+                min_size=k_i, max_size=k_i))
+            dels = draw(st.lists(
+                st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+                min_size=k_d, max_size=k_d))
+            batches.append((ins, dels))
+        g = Graph.from_edges(n, np.array(edges or [[0, 0]], dtype=np.int64))
+        return g, batches
+
+    @settings(max_examples=25, deadline=None)
+    @given(delta_streams(), st.sampled_from(ENGINES))
+    def test_random_delta_streams_end_valid(stream, engine):
+        """Property: any delta sequence (no-ops and duplicates included)
+        leaves the dynamic coloring exactly as valid as a fresh color()
+        of the final graph — and the final graphs themselves agree."""
+        g, batches = stream
+        dyn = DynamicColoring(
+            g, ColoringSpec(strategy="recolor", engine=engine,
+                            concurrency=4, max_rounds=256))
+        ref = g
+        for ins, dels in batches:
+            ins = np.array(ins, np.int64).reshape(-1, 2)
+            dels = np.array(dels, np.int64).reshape(-1, 2)
+            dyn.apply_batch(inserts=ins, deletes=dels)
+            ref = ref.apply_delta(inserts=ins, deletes=dels)
+        # the maintained graph IS the replayed graph
+        np.testing.assert_array_equal(dyn.graph.col_idx, ref.col_idx)
+        np.testing.assert_array_equal(dyn.graph.row_ptr, ref.row_ptr)
+        fresh = color(ref, ColoringSpec(strategy="iterative", engine=engine,
+                                        concurrency=4, max_rounds=256))
+        assert validate_coloring(ref, fresh.colors) \
+            == validate_coloring(ref, dyn.colors) is True
+        assert dyn.num_colors <= dyn.color_bound

@@ -1,0 +1,140 @@
+"""Coloring-service tests (repro.serve.coloring): LRU plan-cache behavior
+keyed on the (spec, PlanShape) bucket envelope, vmapped micro-batching of
+same-bucket requests with in-order results, stats accounting, and the CLI
+smoke mode."""
+import numpy as np
+import pytest
+
+from repro.core import ColoringSpec, color, rmat, validate_coloring
+from repro.serve.coloring import ColoringService, main as serve_main
+
+
+def _graphs(n=4, scale=8, name="RMAT-G"):
+    return [rmat.paper_graph(name, scale=scale, seed=s) for s in range(n)]
+
+
+def test_single_requests_share_a_cached_plan():
+    svc = ColoringService(default_spec=ColoringSpec(strategy="dataflow"))
+    gs = _graphs(3)
+    # same family + scale: envelopes quantize onto the bucket ladder, so
+    # same-bucket graphs MUST share one plan (and its single jit trace)
+    keys = {svc.envelope(svc.default_spec, g) for g in gs}
+    served = [svc.color(g) for g in gs]
+    st = svc.stats()
+    assert st["requests"] == 3
+    assert st["cache_misses"] == len(keys)
+    assert st["cache_hits"] == 3 - len(keys)
+    assert st["resident_plans"] == len(keys)
+    for g, s in zip(gs, served):
+        assert validate_coloring(g, s.report.colors)
+    # served colors == the front-door one-shot result
+    ref = color(gs[0], svc.default_spec)
+    np.testing.assert_array_equal(ref.colors, served[0].report.colors)
+
+
+def test_micro_batching_matches_sequential_and_keeps_order():
+    spec = ColoringSpec(strategy="dataflow", engine="bitmap")
+    svc = ColoringService(default_spec=spec)
+    gs = _graphs(4)
+    served = svc.color_batch(gs)
+    assert [s.report.colors.shape for s in served] \
+        == [(g.num_vertices,) for g in gs]
+    for g, s in zip(gs, served):
+        assert validate_coloring(g, s.report.colors)
+        np.testing.assert_array_equal(color(g, spec).colors,
+                                      s.report.colors)
+    st = svc.stats()
+    assert st["requests"] == 4
+    assert st["micro_batches"] >= 1
+    assert st["batched_requests"] >= 2
+    assert any(s.batched for s in served)
+
+
+def test_mixed_spec_batch_groups_by_key():
+    g = _graphs(1)[0]
+    s1 = ColoringSpec(strategy="dataflow")
+    s2 = ColoringSpec(strategy="iterative", concurrency=16)
+    svc = ColoringService()
+    served = svc.color_batch([(g, s1), (g, s2), (g, s1)])
+    assert [s.key[0] for s in served] == [s1, s2, s1]
+    for s in served:
+        assert validate_coloring(g, s.report.colors)
+    assert svc.stats()["resident_plans"] == 2
+
+
+def test_lru_eviction():
+    svc = ColoringService(cache_size=1,
+                          default_spec=ColoringSpec(strategy="dataflow"))
+    a = rmat.paper_graph("RMAT-G", scale=7, seed=0)
+    b = rmat.paper_graph("RMAT-G", scale=8, seed=0)  # different V: new key
+    svc.color(a)
+    svc.color(b)
+    svc.color(a)  # evicted by b, recompiled
+    st = svc.stats()
+    assert st["resident_plans"] == 1
+    assert st["evictions"] == 2
+    assert st["cache_misses"] == 3 and st["cache_hits"] == 0
+
+
+def test_recolor_runtime_state_flows_through_service():
+    g = _graphs(1)[0]
+    spec = ColoringSpec(strategy="recolor", concurrency=16)
+    svc = ColoringService(default_spec=spec)
+    base = svc.color(g).report
+    seed = np.zeros(g.num_vertices, bool)
+    seed[:4] = True
+    rep = svc.color(g, colors=base.colors, seed=seed).report
+    assert validate_coloring(g, rep.colors)
+    np.testing.assert_array_equal(rep.colors[~seed], base.colors[~seed])
+    assert svc.stats()["cache_hits"] == 1  # warm start reused the plan
+
+
+def test_stats_shape():
+    svc = ColoringService()
+    st = svc.stats()
+    assert st["requests"] == 0 and st["latency"] == {"count": 0}
+    svc.color(_graphs(1)[0])
+    st = svc.stats()
+    assert st["latency"]["count"] == 1
+    assert st["throughput_gps"] > 0
+    for k in ("mean_ms", "p50_ms", "p95_ms", "max_ms"):
+        assert st["latency"][k] >= 0
+
+
+def test_cli_smoke(capsys):
+    svc = serve_main(["--smoke", "--requests", "4", "--batch", "2",
+                      "--scale", "7", "--stream-batches", "1"])
+    out = capsys.readouterr().out
+    assert "[serve] served 4 requests" in out
+    assert "streaming done" in out
+    assert svc.stats()["requests"] == 4
+
+
+def test_cache_size_validation():
+    with pytest.raises(ValueError):
+        ColoringService(cache_size=0)
+
+
+def test_envelope_degree_quantizes_to_octaves():
+    """The cache key's degree bound rounds up to full powers of two:
+    family-level degree jitter (R-MAT hubs) must not fragment the cache
+    into one plan per graph."""
+    svc = ColoringService()
+    spec = svc.default_spec
+    shapes = {svc.envelope(spec, g) for g in _graphs(4)}
+    for sh in shapes:
+        assert sh.max_degree & (sh.max_degree - 1) == 0  # power of two
+    # far fewer keys than graphs (the whole point of the quantization)
+    assert len(shapes) <= 2
+
+
+def test_latency_window_is_bounded():
+    """Long-lived services must not grow a float per request forever: the
+    latency deque is a sliding window, the counters stay lifetime-exact."""
+    svc = ColoringService(latency_window=3)
+    g = _graphs(1)[0]
+    for _ in range(5):
+        svc.color(g)
+    st = svc.stats()
+    assert st["requests"] == 5          # lifetime counter
+    assert st["latency"]["count"] == 3  # window-bounded percentiles
