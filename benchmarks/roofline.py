@@ -1,9 +1,28 @@
-"""Roofline report builder: reads the dry-run JSON records and renders the
-EXPERIMENTS.md §Roofline table (per arch x shape x mesh: three terms,
-dominant bottleneck, MODEL_FLOPS ratio, roofline fraction).
+"""Roofline report builder.
+
+Two modes:
+
+* default — reads the dry-run JSON records and renders the EXPERIMENTS.md
+  §Roofline table (per arch x shape x mesh: three terms, dominant
+  bottleneck, MODEL_FLOPS ratio, roofline fraction);
+* ``--round`` — a MEASURED coloring-round comparison (ISSUE 6 / ROADMAP
+  item 2): runs real Rokos detect-and-recolor rounds on a k-regular
+  circulant graph two ways — the 3-pass ``ell_pallas`` path (conflict
+  kernel, ELL gather + ``firstfit`` mex kernel, assign) vs the 1-pass
+  ``fused_pallas`` path (pack, ``round_fused``, assign) — asserts the two
+  are bit-identical every round, accounts the bytes each path moves
+  (padded kernel shapes, every materialized array counted once per
+  producing and once per consuming pass), and reports achieved-vs-peak
+  bandwidth against a measured element-wise-copy peak. The headline
+  numbers: the fused path reads the slab ONCE per round where the 3-pass
+  path's kernels read 4 edge-scale arrays + the slab (5x at degree =
+  block_d), and total bytes drop >2x. Wall times are honest but, off-TPU,
+  dominated by Pallas interpret overhead — bytes are the roofline metric.
 
 Usage:  PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
         [--markdown]
+        PYTHONPATH=src python -m benchmarks.roofline --round [--scale 10]
+        [--degree 128] [--max-rounds 12] [--json BENCH_roofline_round.json]
 """
 from __future__ import annotations
 
@@ -11,6 +30,7 @@ import argparse
 import glob
 import json
 import os
+import time
 
 ARCH_ORDER = [
     "mistral-nemo-12b", "qwen3-4b", "starcoder2-3b", "gemma2-2b",
@@ -63,12 +83,232 @@ def markdown_table(recs):
     return "\n".join(lines)
 
 
+# --------------------------------------------------------------------------
+# --round: measured coloring-round mode (3-pass ell_pallas vs 1-pass fused)
+# --------------------------------------------------------------------------
+_I4 = 4  # int32 bytes — every array in the round loop
+
+
+def circulant_ell(num_vertices: int, degree: int):
+    """k-regular circulant graph (vertex i ~ i±1..i±k/2 mod V): the
+    structured-mesh analogue with an exactly full ELL slab, so the padded
+    kernel shapes match the true neighborhood work. Returns (ell [V, k]
+    neighbor ids, src [E], dst [E]) as numpy int32, E = V*k directed."""
+    import numpy as np
+
+    if degree % 2 or degree >= num_vertices:
+        raise ValueError("degree must be even and < num_vertices")
+    half = np.arange(1, degree // 2 + 1)
+    offs = np.concatenate([half, -half])
+    ids = np.arange(num_vertices)[:, None]
+    ell = ((ids + offs[None, :]) % num_vertices).astype(np.int32)
+    src = np.repeat(np.arange(num_vertices, dtype=np.int32), degree)
+    return ell, src, ell.reshape(-1)
+
+
+def round_bytes_model(num_vertices: int, degree: int, num_edges: int,
+                      block_v: int = 512, block_d: int = 128) -> dict:
+    """Analytic bytes moved per round by each path (int32 everywhere;
+    padded kernel shapes; each materialized array counted once per
+    producing pass and once per consuming pass).
+
+    3-pass:  detect  — kernel reads cs, cd, src, dst [4E], writes conf [E],
+                       pending scatter reads conf [E] writes [V]
+                       (+ the cs/cd gather writes [2E]);
+             mex     — gather reads ell slab, writes nbr slab; firstfit
+                       reads nbr slab, writes mex [V];
+             assign  — reads mex, pending, colors [3V], writes colors [V].
+    fused:   pack    — reads ell slab, writes entries slab;
+             kernel  — round_fused reads entries slab + own [V], writes
+                       mex + conf [2V];
+             assign  — reads mex, conf, colors [3V], writes colors [V].
+    """
+    vp = -(-num_vertices // block_v) * block_v
+    dp = -(-degree // block_d) * block_d
+    slab = vp * dp * _I4
+    e = num_edges * _I4
+    v = num_vertices * _I4
+    three_reads = 4 * e + e + slab + slab + 3 * v
+    three_writes = 2 * e + e + v + slab + v + v
+    fused_reads = slab + slab + v + 3 * v
+    fused_writes = slab + 2 * v + v
+    # slab-scale arrays consumed by the Pallas kernels themselves — the
+    # ISSUE metric ("one read of the ELL slab per round instead of three")
+    kernel_slab_reads_three = (4 * e + slab) / slab
+    kernel_slab_reads_fused = slab / slab
+    return {
+        "slab_bytes": slab,
+        "three_pass_bytes": three_reads + three_writes,
+        "fused_bytes": fused_reads + fused_writes,
+        "bytes_ratio": (three_reads + three_writes)
+        / (fused_reads + fused_writes),
+        "kernel_slab_reads_three": kernel_slab_reads_three,
+        "kernel_slab_reads_fused": kernel_slab_reads_fused,
+        "kernel_slab_read_ratio": kernel_slab_reads_three
+        / kernel_slab_reads_fused,
+    }
+
+
+def _timed_call(fn, *args, reps: int = 3) -> float:
+    """Best-of-``reps`` wall seconds for fn(*args) (blocks on the result)."""
+    import jax
+
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def measured_peak_gbps(mbytes: int = 64) -> float:
+    """Measured element-wise-copy bandwidth (read+write) as the 'peak' the
+    achieved numbers are normalized against — a STREAM-style ceiling on
+    whatever backend is attached, not a datasheet number."""
+    import jax
+    import jax.numpy as jnp
+
+    n = mbytes * (1 << 20) // _I4
+    x = jnp.arange(n, dtype=jnp.int32)
+    f = jax.jit(lambda a: a + 1)
+    jax.block_until_ready(f(x))  # compile
+    t = _timed_call(f, x, reps=5)
+    return 2 * n * _I4 / t / 1e9
+
+
+def round_report(scale: int = 10, degree: int = 128, max_rounds: int = 12,
+                 seed: int = 0, interpret=None) -> dict:
+    """Run detect→mex→assign rounds both ways, assert bit-parity, account
+    bytes, measure wall time and achieved-vs-peak bandwidth."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    import repro.kernels as K
+    from repro.core.engine import num_color_words
+
+    interp = K.resolve_interpret(interpret)
+    V = 1 << scale
+    ell_np, src_np, dst_np = circulant_ell(V, degree)
+    E = src_np.shape[0]
+    words = num_color_words(degree + 1)
+    ell = jnp.asarray(ell_np)
+    src, dst = jnp.asarray(src_np), jnp.asarray(dst_np)
+    row = jnp.arange(V, dtype=jnp.int32)[:, None]
+    real = ell < V
+    elig = real & (ell < row)  # Alg. 2: u recolors iff some nbr v < u ties
+
+    @jax.jit
+    def three_pass_round(colors):
+        cpad = jnp.concatenate([colors, jnp.zeros((1,), jnp.int32)])
+        cs, cd = cpad[src], cpad[dst]
+        conf_e = K.conflict_mask(cs, cd, src, dst, interpret=interp)
+        pending = (jnp.zeros((V,), jnp.int32)
+                   .at[src].max(conf_e, mode="drop")) > 0
+        nbr = K.ell_gather_colors(colors, ell)
+        mex = K.firstfit(nbr, words=words, interpret=interp)
+        return jnp.where(pending, mex, colors), pending.sum(dtype=jnp.int32)
+
+    @jax.jit
+    def fused_round(colors):
+        nbr = K.ell_gather_colors(colors, ell)
+        ent = K.pack_entries(nbr, real, elig)
+        mex, conf = K.round_fused(ent, colors, words=words, interpret=interp)
+        return jnp.where(conf > 0, mex, colors), conf.sum(dtype=jnp.int32)
+
+    rng = np.random.default_rng(seed)
+    c0 = jnp.asarray(rng.integers(1, degree + 2, size=V).astype(np.int32))
+    # warm up / compile both paths once before timing
+    jax.block_until_ready(three_pass_round(c0))
+    jax.block_until_ready(fused_round(c0))
+
+    rounds, c3, cf = [], c0, c0
+    for r in range(max_rounds):
+        t3 = _timed_call(three_pass_round, c3)
+        tf = _timed_call(fused_round, cf)
+        (c3, n3) = three_pass_round(c3)
+        (cf, nf) = fused_round(cf)
+        if not np.array_equal(np.asarray(c3), np.asarray(cf)):
+            raise AssertionError(f"round {r}: fused != 3-pass colors")
+        if int(n3) != int(nf):
+            raise AssertionError(f"round {r}: conflict counts differ")
+        rounds.append({"round": r, "conflicts": int(n3),
+                       "three_pass_us": t3 * 1e6, "fused_us": tf * 1e6})
+        if int(n3) == 0:
+            break
+
+    bytes_ = round_bytes_model(V, degree, E)
+    peak = measured_peak_gbps()
+    t3m = min(r["three_pass_us"] for r in rounds) * 1e-6
+    tfm = min(r["fused_us"] for r in rounds) * 1e-6
+    ach3 = bytes_["three_pass_bytes"] / t3m / 1e9
+    achf = bytes_["fused_bytes"] / tfm / 1e9
+    return {
+        "kind": "roofline_round",
+        "graph": {"kind": "circulant", "num_vertices": V, "degree": degree,
+                  "num_edges_directed": E},
+        "words": words,
+        "interpret": bool(interp),
+        "backend": jax.default_backend(),
+        "parity": True,
+        "rounds": rounds,
+        "bytes": bytes_,
+        "bandwidth": {
+            "peak_gbps": peak,
+            "three_pass_achieved_gbps": ach3,
+            "fused_achieved_gbps": achf,
+            "three_pass_fraction": ach3 / peak,
+            "fused_fraction": achf / peak,
+        },
+    }
+
+
+def print_round_report(rep: dict) -> None:
+    g, b, bw = rep["graph"], rep["bytes"], rep["bandwidth"]
+    print(f"coloring round roofline — circulant V={g['num_vertices']} "
+          f"k={g['degree']} E={g['num_edges_directed']} "
+          f"words={rep['words']} backend={rep['backend']}"
+          f"{' (interpret)' if rep['interpret'] else ''}")
+    print(f"  bytes/round   three-pass {b['three_pass_bytes']:>12,}  "
+          f"fused {b['fused_bytes']:>12,}  ratio {b['bytes_ratio']:.2f}x")
+    print(f"  kernel slab reads/round   three-pass "
+          f"{b['kernel_slab_reads_three']:.2f}  fused "
+          f"{b['kernel_slab_reads_fused']:.2f}  "
+          f"ratio {b['kernel_slab_read_ratio']:.2f}x")
+    print(f"  bandwidth (peak {bw['peak_gbps']:.1f} GB/s)   three-pass "
+          f"{bw['three_pass_achieved_gbps']:.3f} GB/s "
+          f"({bw['three_pass_fraction']:.4f})   fused "
+          f"{bw['fused_achieved_gbps']:.3f} GB/s "
+          f"({bw['fused_fraction']:.4f})")
+    for r in rep["rounds"]:
+        print(f"  round {r['round']}: conflicts {r['conflicts']:>6}  "
+              f"three-pass {r['three_pass_us']:>10.1f} us  "
+              f"fused {r['fused_us']:>10.1f} us")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="results/dryrun")
     ap.add_argument("--tag", default="baseline")
     ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--round", action="store_true",
+                    help="measured coloring-round mode (3-pass vs fused)")
+    ap.add_argument("--scale", type=int, default=10)
+    ap.add_argument("--degree", type=int, default=128)
+    ap.add_argument("--max-rounds", type=int, default=12)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None,
+                    help="--round: also write the report to this path")
     args = ap.parse_args()
+    if args.round:
+        rep = round_report(scale=args.scale, degree=args.degree,
+                           max_rounds=args.max_rounds, seed=args.seed)
+        print_round_report(rep)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(rep, f, indent=1, sort_keys=True)
+            print(f"wrote {args.json}")
+        return
     recs = load(args.dir, args.tag)
     if args.markdown:
         print(markdown_table(recs))

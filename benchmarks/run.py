@@ -15,8 +15,8 @@ override, ``engine_compare`` additionally honors ``--ell``):
   fig10_conflicts           | conflicts/round, total, iters    | 16
   fig11_colors              | colors vs concurrency vs serial  | 15
   dataflow_exactness        | DATAFLOW == serial + sweep count | 15
-  engine_compare            | sort vs bitmap (vs ell_pallas    | 13
-                            | with --ell) mex backends         |
+  engine_compare            | sort vs bitmap (vs ell_pallas +  | 13
+                            | fused_pallas with --ell)         |
   d2_compare                | distance-2 + bipartite partial-  | 9
                             | D2 models vs serial D2/PD2       |
                             | oracles, sort/bitmap parity      |
@@ -27,7 +27,8 @@ override, ``engine_compare`` additionally honors ``--ell``):
   stream_compare            | streaming deltas: incremental    | 10
                             | "recolor" repair vs fresh full   |
                             | recoloring, per batch size       |
-  kernel_firstfit           | Pallas firstfit vs sort engine   | 13
+  kernel_firstfit           | Pallas firstfit + fused round    | 13
+                            | engines vs sort engine           |
   comm_schedule             | coloring-scheduled all-to-all    | (none)
 
 ``--json out.json`` additionally writes every row machine-readably
@@ -177,7 +178,8 @@ def engine_compare(scale=13, concurrency=256, with_ell=False):
     the per-round sweep/conflict histories must match exactly; what differs
     is us_per_call of the first-fit formulation (Rokos arXiv:1505.04086:
     the inner loop dominates and rewards the cheaper per-sweep form)."""
-    engines = ["sort", "bitmap"] + (["ell_pallas"] if with_ell else [])
+    engines = ["sort", "bitmap"] + (["ell_pallas", "fused_pallas"]
+                                    if with_ell else [])
     print(f"\n== engine compare: {'/'.join(engines)} "
           f"(scale {scale}, P={concurrency}) ==")
     for name in GRAPHS:
@@ -429,16 +431,23 @@ def stream_compare(scale=10, concurrency=64, batch_fracs=(0.001, 0.01, 0.1)):
 
 
 def kernel_firstfit(scale=13):
-    print(f"\n== Pallas firstfit engine vs sort-mex engine (scale {scale}) ==")
+    print(f"\n== Pallas firstfit/fused engines vs sort-mex engine "
+          f"(scale {scale}) ==")
     g = rmat.paper_graph("RMAT-G", scale=scale, seed=0)
     dg = g.to_device(layout=("edges", "ell"))
     res_s, us_s = _timed(color_iterative, dg, concurrency=256, repeat=1)
     res_k, us_k = _timed(color_iterative, dg, concurrency=256,
                          engine="ell_pallas", repeat=1)
+    res_f, us_f = _timed(color_iterative, dg, concurrency=256,
+                         engine="fused_pallas", repeat=1)
     ok = validate_coloring(g, np.asarray(res_k.colors))
+    okf = validate_coloring(g, np.asarray(res_f.colors))
+    assert np.array_equal(np.asarray(res_k.colors), np.asarray(res_f.colors))
     _row("kernel/sort_engine", us_s, f"colors={res_s.num_colors}")
     _row("kernel/pallas_engine", us_k,
          f"colors={res_k.num_colors};valid={ok};interpret_mode=True")
+    _row("kernel/fused_engine", us_f,
+         f"colors={res_f.num_colors};valid={okf};interpret_mode=True")
 
 
 def comm_schedule_bench():
@@ -514,8 +523,9 @@ def main() -> None:
                     help="override graph scale for the heavy benchmarks "
                          "(per-family defaults in the registry table)")
     ap.add_argument("--ell", action="store_true",
-                    help="include the ell_pallas backend in engine_compare "
-                         "(slow off-TPU: kernels run in interpret mode)")
+                    help="include the ell_pallas and fused_pallas backends "
+                         "in engine_compare (slow off-TPU: kernels run in "
+                         "interpret mode)")
     ap.add_argument("--json", default=None, metavar="OUT.json",
                     help="also write every row machine-readably (name, "
                          "us_per_call, per-family structured fields) — the "

@@ -3,7 +3,8 @@
 Generates the paper's three R-MAT graph families and colors each through
 ``repro.core.color`` with a single declarative ``ColoringSpec`` — strategy
 (``--strategy iterative|dataflow|distributed``), first-fit mex backend
-(``--engine sort|bitmap|ell_pallas``), coloring model (``--model d1|d2``)
+(``--engine sort|bitmap|ell_pallas|fused_pallas`` — the last runs the
+fused detect→mex round kernel), coloring model (``--model d1|d2``)
 and vertex ordering (``--ordering natural|random|largest_first|
 smallest_last``) all compose without any per-driver dispatch — then
 validates every result against the model's rules and serial oracle.
@@ -12,6 +13,7 @@ validates every result against the model's rules and serial oracle.
     PYTHONPATH=src python examples/quickstart.py --strategy dataflow \\
         --ordering largest_first
     PYTHONPATH=src python examples/quickstart.py --scale 8 --model d2
+    PYTHONPATH=src python examples/quickstart.py --scale 8 --engine fused_pallas
     PYTHONPATH=src python examples/quickstart.py --scale 10 --stream 4
 
 ``--stream N`` additionally pushes N ~1%-edge delta batches through

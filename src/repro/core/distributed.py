@@ -338,13 +338,14 @@ def build_distributed_coloring(mesh: Mesh, verts_local: int, edges_local: int,
 
     ``engine`` picks the local first-fit backend; ``max_colors`` (global
     Delta+1) sizes the bitmap/ell backends; ``ell_width`` (max degree of any
-    owned vertex) is required for ``engine="ell_pallas"``.
+    owned vertex) is required for the ELL-slab engines (``"ell_pallas"``,
+    ``"fused_pallas"``).
     ``frontier_cap_v``/``frontier_cap_e`` enable the per-shard frontier
     slabs (0 = full sweeps every round; see repro.core.frontier).
     """
     backend = get_backend(engine)
     if backend.needs_ell and ell_width <= 0:
-        raise ValueError("engine='ell_pallas' needs ell_width (the max "
+        raise ValueError(f"engine={backend.name!r} needs ell_width (the max "
                          "degree across owned vertices) — color_distributed "
                          "wires it from the host graph automatically")
     if backend.needs_color_bound and max_colors <= 0:

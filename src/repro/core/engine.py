@@ -7,7 +7,7 @@ seed hard-wired one mex formulation and re-implemented the speculative
 fixpoint three times (iterative / dataflow / distributed). This module is
 the extraction:
 
-* :class:`MexBackend` — a named, registered first-fit engine. Three ship:
+* :class:`MexBackend` — a named, registered first-fit engine. Four ship:
 
   - ``"sort"``       the segmented sort-based mex (O(E log E) per sweep,
                      :func:`repro.core.mex.segment_mex`) — works on any
@@ -20,7 +20,10 @@ the extraction:
   - ``"ell_pallas"`` the Pallas TPU ``firstfit`` kernel over an ELL slab,
                      fed by an O(E) edge→(row, slot) scatter; needs the
                      graph built with ``to_device(layout="ell")`` (or a
-                     device-side :func:`edge_slots` mapping).
+                     device-side :func:`edge_slots` mapping);
+  - ``"fused_pallas"`` the Pallas ``round_fused`` kernel: the same bitmask
+                     mex fused with the Alg. 2 conflict predicate in one
+                     slab read (ELL requirements as ``"ell_pallas"``).
 
 * :class:`SweepSpec` — the per-round edge-space description every driver
   lowers its precedence semantics into: which edges forbid, and whether an
@@ -288,6 +291,86 @@ class EllPallasMexBackend(MexBackend):
         return mex
 
 
+@dataclasses.dataclass(frozen=True)
+class FusedPallasMexBackend(MexBackend):
+    """The Pallas ``round_fused`` kernel (kernels/round_fused.py, DESIGN.md
+    §FusedRound): the ``firstfit`` bitmask mex PLUS the Alg. 2 conflict
+    predicate in ONE read of the ELL slab. Per-round contributions scatter
+    into the packed int32 entry slab (color | FORBID bit) exactly like the
+    ``ell_pallas`` scatter — the engine protocol pre-masks sweeps by
+    precedence, so the drivers consume only the mex lane here (the conflict
+    lane stays inert: no CONFLICT bits are packed and ``own_colors`` is 0).
+    The full detect→mex→assign fusion over live colors is exercised and
+    measured by ``benchmarks/roofline.py --round``.
+
+    Bit-identical to ``"bitmap"``/``"ell_pallas"`` by construction: same
+    forbidden bitset (color 0 pre-set, out-of-range colors drop), same
+    min-free-bit scan.
+    """
+
+    name = "fused_pallas"
+    needs_ell = True
+    needs_color_bound = True
+    words: Optional[int] = None
+    interpret: Optional[bool] = None
+
+    def bind(self, *, num_vertices: int, max_colors: int = 0,
+             ell_slot=None, ell_width: int = 0, max_degree: int = -1) -> MexFn:
+        from ..kernels.ops import resolve_interpret  # deferred: core importable solo
+
+        if ell_slot is None:
+            raise ValueError(
+                "fused_pallas engine needs the ELL layout: build the graph "
+                "with Graph.to_device(layout='ell') (or compute edge_slots "
+                "for a custom partition)")
+        required = max_degree if max_degree >= 0 else max_colors - 1
+        if required > 0 and ell_width < required:
+            raise ValueError(
+                f"fused_pallas engine: ELL width {ell_width} is below the "
+                f"graph's max degree {required}; rebuild with "
+                "Graph.to_device(layout='ell') (full width)")
+        V = num_vertices
+        D = max(1, int(ell_width))
+        words = _resolve_words(self.words, max_colors, self.name)
+        interp = resolve_interpret(self.interpret)
+        from ..kernels.round_fused import FORBID_BIT, round_fused
+
+        def mex(key_v, key_c):
+            ent = (jnp.zeros((V + 1, D), jnp.int32)
+                   .at[key_v, ell_slot].set(key_c | FORBID_BIT, mode="drop"))
+            m, _ = round_fused(ent[:V], jnp.zeros((V,), jnp.int32),
+                               words=words, interpret=interp)
+            return m
+
+        return mex
+
+    def bind_slab(self, *, capacity: int, max_colors: int = 0,
+                  ell_width: int = 0, max_degree: int = -1) -> SlabMexFn:
+        """Frontier bind: the compacted (capacity, D) entry slab scatters
+        through the per-round ``slot`` operand, mirroring the ell_pallas
+        slab bind."""
+        from ..kernels.ops import resolve_interpret
+        from ..kernels.round_fused import FORBID_BIT, round_fused
+
+        D = max(1, int(ell_width if ell_width > 0 else max_degree))
+        if max_degree > D:
+            raise ValueError(
+                f"fused_pallas slab bind: width {D} is below the graph's max "
+                f"degree {max_degree}; a frontier row would drop forbids")
+        words = _resolve_words(self.words, max_colors, self.name)
+        interp = resolve_interpret(self.interpret)
+        cap = int(capacity)
+
+        def mex(key_v, key_c, slot):
+            ent = (jnp.zeros((cap + 1, D), jnp.int32)
+                   .at[key_v, slot].set(key_c | FORBID_BIT, mode="drop"))
+            m, _ = round_fused(ent[:cap], jnp.zeros((cap,), jnp.int32),
+                               words=words, interpret=interp)
+            return m
+
+        return mex
+
+
 # --------------------------------------------------------------------------
 # registry
 # --------------------------------------------------------------------------
@@ -324,6 +407,7 @@ def available_backends() -> Tuple[str, ...]:
 register_backend(SortMexBackend())
 register_backend(BitmapMexBackend())
 register_backend(EllPallasMexBackend())
+register_backend(FusedPallasMexBackend())
 
 
 # --------------------------------------------------------------------------

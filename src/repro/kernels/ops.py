@@ -23,6 +23,19 @@ from .conflict import conflict_mask
 INTERPRET = jax.default_backend() != "tpu"
 
 
+def resolve_interpret(interpret: bool | None = None) -> bool:
+    """Resolve an ``interpret=`` override against the module-level
+    ``INTERPRET`` default.
+
+    Every kernel entry point that accepts ``interpret=None`` must call this
+    OUTSIDE its jit boundary: ``interpret`` is a static argument, so a
+    fallback read inside a jitted body is frozen at first trace — the cache
+    key stays ``None`` and a later flip of ``ops.INTERPRET`` (tests, TPU
+    attach) silently keeps serving the stale trace.
+    """
+    return INTERPRET if interpret is None else bool(interpret)
+
+
 def ell_gather_colors(colors: jnp.ndarray, ell: jnp.ndarray) -> jnp.ndarray:
     """Gather neighbor colors for an ELL adjacency slab.
 
@@ -35,23 +48,34 @@ def ell_gather_colors(colors: jnp.ndarray, ell: jnp.ndarray) -> jnp.ndarray:
 
 
 @functools.partial(jax.jit, static_argnames=("words", "interpret"))
+def _ell_mex(colors: jnp.ndarray, ell: jnp.ndarray, *, words: int,
+             interpret: bool) -> jnp.ndarray:
+    nbr = ell_gather_colors(colors, ell)
+    return firstfit(nbr, words=words, interpret=interpret)
+
+
 def ell_mex(colors: jnp.ndarray, ell: jnp.ndarray, *, words: int = 16,
             interpret: bool | None = None) -> jnp.ndarray:
     """mex per vertex from an ELL slab — kernel-powered Alg. 1 inner loop."""
-    nbr = ell_gather_colors(colors, ell)
-    return firstfit(nbr, words=words,
-                    interpret=INTERPRET if interpret is None else interpret)
+    return _ell_mex(colors, ell, words=words,
+                    interpret=resolve_interpret(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def count_conflicts_kernel(colors: jnp.ndarray, src: jnp.ndarray,
-                           dst: jnp.ndarray, *, interpret: bool | None = None
-                           ) -> jnp.ndarray:
-    """Total conflicted edges via the Pallas conflict kernel."""
+def _count_conflicts_kernel(colors: jnp.ndarray, src: jnp.ndarray,
+                            dst: jnp.ndarray, *, interpret: bool
+                            ) -> jnp.ndarray:
     cpad = jnp.concatenate([colors, jnp.zeros((1,), jnp.int32)])
     v = colors.shape[0]
     cs = cpad[jnp.minimum(src, v)]
     cd = cpad[jnp.minimum(dst, v)]
-    mask = conflict_mask(cs, cd, src, dst,
-                         interpret=INTERPRET if interpret is None else interpret)
+    mask = conflict_mask(cs, cd, src, dst, interpret=interpret)
     return mask.sum(dtype=jnp.int32)
+
+
+def count_conflicts_kernel(colors: jnp.ndarray, src: jnp.ndarray,
+                           dst: jnp.ndarray, *, interpret: bool | None = None
+                           ) -> jnp.ndarray:
+    """Total conflicted edges via the Pallas conflict kernel."""
+    return _count_conflicts_kernel(colors, src, dst,
+                                   interpret=resolve_interpret(interpret))

@@ -79,3 +79,103 @@ def test_stream_compare_registered(bench):
     # the module docstring table and the registry can't drift silently
     for fam in bench.FAMILIES:
         assert fam in bench.__doc__
+
+
+# ------------------------------------------------- bench_gate / bench_trend
+def _load_tool(name):
+    path = os.path.join(os.path.dirname(__file__), "..", "tools",
+                        f"{name}.py")
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _write_bench(path, rows):
+    payload = {"schema": 1, "families": ["fam"], "scale_override": None,
+               "backend": "cpu", "rows": [
+                   dict(name=n, us_per_call=u, derived="") for n, u in rows]}
+    path.write_text(json.dumps(payload))
+
+
+def test_bench_gate_machine_speed_cancels(tmp_path):
+    """A uniform 3x slowdown (different machine) must NOT trip the gate."""
+    gate = _load_tool("bench_gate")
+    base, cur = tmp_path / "base.json", tmp_path / "cur.json"
+    rows = [("a/x", 100.0), ("a/y", 200.0), ("b/z", 400.0)]
+    _write_bench(base, rows)
+    _write_bench(cur, [(n, 3.0 * u) for n, u in rows])
+    rc = gate.main([f"{base}:{cur}", "--tolerance", "0.25"])
+    assert rc == 0
+
+
+def test_bench_gate_catches_relative_regression(tmp_path):
+    """One family regressing 2x relative to another trips the gate even
+    under an overall machine-speed shift."""
+    gate = _load_tool("bench_gate")
+    b1, c1 = tmp_path / "b1.json", tmp_path / "c1.json"
+    b2, c2 = tmp_path / "b2.json", tmp_path / "c2.json"
+    _write_bench(b1, [("f1/a", 100.0), ("f1/b", 100.0), ("f1/c", 100.0)])
+    _write_bench(c1, [("f1/a", 150.0), ("f1/b", 150.0), ("f1/c", 150.0)])
+    _write_bench(b2, [("f2/a", 100.0), ("f2/b", 100.0)])
+    _write_bench(c2, [("f2/a", 450.0), ("f2/b", 450.0)])
+    rc = gate.main([f"{b1}:{c1}", f"{b2}:{c2}", "--tolerance", "0.25"])
+    assert rc == 1
+
+
+def test_bench_gate_refuses_disjoint_rows(tmp_path):
+    gate = _load_tool("bench_gate")
+    base, cur = tmp_path / "base.json", tmp_path / "cur.json"
+    _write_bench(base, [("old/x", 10.0)])
+    _write_bench(cur, [("new/x", 10.0)])
+    with pytest.raises(SystemExit, match="no common rows"):
+        gate.main([f"{base}:{cur}"])
+
+
+def test_bench_trend_schemas(tmp_path):
+    """extract_rows handles both committed-baseline schemas: run.py rows
+    and the roofline_round record."""
+    trend = _load_tool("bench_trend")
+    rows = trend.extract_rows(
+        {"rows": [{"name": "a", "us_per_call": 5.0},
+                  {"name": "zero", "us_per_call": 0.0}]})
+    assert rows == {"a": 5.0}
+    rr = trend.extract_rows(
+        {"kind": "roofline_round",
+         "rounds": [{"three_pass_us": 30.0, "fused_us": 10.0},
+                    {"three_pass_us": 25.0, "fused_us": 12.0}]})
+    assert rr == {"roofline_round/three_pass": 25.0,
+                  "roofline_round/fused": 10.0}
+    assert trend.extract_rows({"unknown": True}) == {}
+    assert trend.geomean([10.0, 1000.0]) == pytest.approx(100.0)
+
+
+# --------------------------------------------------- roofline round mode
+def test_roofline_round_mode_small():
+    """The measured coloring-round mode (ISSUE 6): fused and 3-pass paths
+    bit-identical each round, and the analytic byte accounting shows the
+    fused round moving >= 2x fewer bytes AND >= 2x fewer kernel slab
+    reads at degree = block_d."""
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "roofline.py")
+    spec = importlib.util.spec_from_file_location("bench_roofline", path)
+    roofline = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(roofline)
+    rep = roofline.round_report(scale=8, degree=128, max_rounds=2)
+    assert rep["parity"] is True
+    assert rep["bytes"]["bytes_ratio"] >= 2.0
+    assert rep["bytes"]["kernel_slab_read_ratio"] >= 2.0
+    assert rep["rounds"] and rep["rounds"][0]["conflicts"] > 0
+    assert rep["bandwidth"]["peak_gbps"] > 0
+
+
+def test_committed_roofline_artifact_meets_acceptance():
+    """The committed BENCH_roofline_round.json must carry the acceptance
+    numbers: parity + >= 2x fewer slab reads for the fused round."""
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_roofline_round.json")
+    with open(path) as f:
+        rep = json.load(f)
+    assert rep["parity"] is True
+    assert rep["bytes"]["kernel_slab_read_ratio"] >= 2.0
+    assert rep["bytes"]["bytes_ratio"] >= 2.0

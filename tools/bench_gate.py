@@ -1,0 +1,106 @@
+"""Bench regression gate: compare fresh ``benchmarks/run.py --json`` output
+against the committed pinned-scale baselines and fail on real regressions.
+
+The committed ``BENCH_*.json`` baselines are produced on whatever machine
+cut the PR, while the gate reruns on a CI runner of unknown speed — so
+absolute ``us_per_call`` comparisons are meaningless. The gate is made
+machine-invariant by normalization: every matched row's ratio
+``current/baseline`` is divided by the MEDIAN ratio across all rows of all
+pairs (the machine-speed factor), and each pair (one benchmark family)
+fails only if the geometric mean of its normalized ratios exceeds
+``1 + tolerance``. A uniform machine-speed change moves every ratio
+equally and cancels; a family that got slower *relative to the others*
+does not. (The median is taken across pairs precisely so a whole-family
+regression cannot normalize itself away — run the gate with >= 2 pairs.)
+
+Usage:
+  python tools/bench_gate.py [--tolerance 0.25] BASELINE:CURRENT [...]
+e.g.
+  python tools/bench_gate.py BENCH_engine_compare.json:fresh_engine.json \
+      BENCH_frontier_compare.json:fresh_frontier.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import statistics
+import sys
+
+
+def load_rows(path: str) -> dict:
+    """name -> us_per_call for every timed row (us_per_call > 0)."""
+    with open(path) as f:
+        payload = json.load(f)
+    return {r["name"]: float(r["us_per_call"]) for r in payload["rows"]
+            if float(r.get("us_per_call", 0.0)) > 0.0}
+
+
+def match_pairs(pairs):
+    """[(baseline_path, current_path)] -> [(label, [(name, ratio)])].
+
+    Rows present in only one side are reported but never gated on — a
+    renamed row must not silently shrink the gate's coverage to nothing,
+    so an empty intersection is an error."""
+    out = []
+    for base_path, cur_path in pairs:
+        base, cur = load_rows(base_path), load_rows(cur_path)
+        common = sorted(set(base) & set(cur))
+        if not common:
+            raise SystemExit(
+                f"bench_gate: no common rows between {base_path} and "
+                f"{cur_path} — wrong family or renamed rows?")
+        missing = sorted(set(base) - set(cur))
+        if missing:
+            print(f"WARNING {base_path}: rows missing from current run "
+                  f"(not gated): {missing}")
+        ratios = [(n, cur[n] / base[n]) for n in common]
+        out.append((base_path, ratios))
+    return out
+
+
+def gate(matched, tolerance: float):
+    """Returns (failures, report_lines). One entry per pair: the geomean
+    of median-normalized ratios vs 1 + tolerance."""
+    all_ratios = [r for _, ratios in matched for _, r in ratios]
+    machine = statistics.median(all_ratios)
+    lines = [f"machine-speed factor (median ratio): {machine:.3f}"]
+    failures = []
+    for label, ratios in matched:
+        norm = [r / machine for _, r in ratios]
+        geo = math.exp(sum(math.log(x) for x in norm) / len(norm))
+        worst_name, worst = max(ratios, key=lambda nr: nr[1] / machine)
+        status = "OK" if geo <= 1.0 + tolerance else "FAIL"
+        lines.append(
+            f"{status:4s} {label}: normalized geomean {geo:.3f} "
+            f"(limit {1.0 + tolerance:.2f}), worst row {worst_name} "
+            f"at {worst / machine:.3f}")
+        if status == "FAIL":
+            failures.append(label)
+    return failures, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("pairs", nargs="+", metavar="BASELINE:CURRENT",
+                    help="baseline/current JSON path pairs, colon-separated")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed normalized geomean regression (0.25 = 25%%)")
+    args = ap.parse_args(argv)
+    pairs = []
+    for p in args.pairs:
+        if ":" not in p:
+            ap.error(f"expected BASELINE:CURRENT, got {p!r}")
+        pairs.append(tuple(p.split(":", 1)))
+    failures, lines = gate(match_pairs(pairs), args.tolerance)
+    print("\n".join(lines))
+    if failures:
+        print(f"\nbench_gate: REGRESSION in {len(failures)} famil"
+              f"{'y' if len(failures) == 1 else 'ies'}: {failures}")
+        return 1
+    print("\nbench_gate: all families within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,129 @@
+"""Cross-PR perf trajectory: render how the committed pinned-scale
+``BENCH_*.json`` baselines evolved over git history (ROADMAP item 5).
+
+For each baseline file, walks every commit that touched it (oldest first),
+reads the file AS OF that commit via ``git show``, and prints a per-row
+``us_per_call`` trajectory plus a per-commit geometric-mean summary. The
+working-tree version (if it differs from HEAD) is appended as the final
+``worktree`` column, so a PR's effect is visible before it merges.
+
+Numbers come from whatever machine produced each commit's baseline, so
+the trajectory is indicative, not a controlled experiment — the geomean
+line exists to make level shifts obvious, the per-row lines to attribute
+them. The machine-invariant comparison lives in ``tools/bench_gate.py``.
+
+Usage:
+  python tools/bench_trend.py [FILES...]       # default: BENCH_*.json
+  python tools/bench_trend.py --csv            # machine-readable
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+import subprocess
+import sys
+
+
+def _git(*args: str) -> str:
+    return subprocess.run(["git", *args], capture_output=True, text=True,
+                          check=True).stdout
+
+
+def extract_rows(payload: dict) -> dict:
+    """name -> us_per_call from either committed-baseline schema: the
+    ``benchmarks/run.py --json`` row list, or a ``roofline_round`` record
+    (best per-round wall time of each path)."""
+    if "rows" in payload:
+        return {r["name"]: float(r["us_per_call"]) for r in payload["rows"]
+                if float(r.get("us_per_call", 0.0)) > 0.0}
+    if payload.get("kind") == "roofline_round":
+        return {
+            "roofline_round/three_pass":
+                min(r["three_pass_us"] for r in payload["rounds"]),
+            "roofline_round/fused":
+                min(r["fused_us"] for r in payload["rounds"]),
+        }
+    return {}
+
+
+def history(path: str):
+    """[(short_rev, subject, rows_dict)] oldest→newest, + worktree tail."""
+    revs = _git("log", "--reverse", "--format=%h %s", "--", path)
+    out = []
+    for line in revs.splitlines():
+        rev, _, subject = line.partition(" ")
+        try:
+            blob = _git("show", f"{rev}:{path}")
+        except subprocess.CalledProcessError:
+            continue  # commit deleted the file
+        rows = extract_rows(json.loads(blob))
+        if rows:
+            out.append((rev, subject[:48], rows))
+    if os.path.exists(path):
+        with open(path) as f:
+            rows = extract_rows(json.load(f))
+        if rows and (not out or rows != out[-1][2]):
+            out.append(("worktree", "(uncommitted)", rows))
+    return out
+
+
+def geomean(values):
+    vals = [v for v in values if v > 0]
+    if not vals:
+        return float("nan")
+    return math.exp(sum(math.log(v) for v in vals) / len(vals))
+
+
+def render(path: str, hist, csv: bool) -> None:
+    if not hist:
+        print(f"{path}: no history")
+        return
+    names = sorted(set().union(*(rows for _, _, rows in hist)))
+    cols = [rev for rev, _, _ in hist]
+    if csv:
+        print(",".join(["file", "row"] + cols))
+        for n in names:
+            cells = [f"{rows.get(n, float('nan')):.1f}"
+                     for _, _, rows in hist]
+            print(",".join([path, n] + cells))
+        return
+    print(f"\n== {path} ==")
+    for rev, subject, _ in hist:
+        print(f"   {rev:>10s}  {subject}")
+    w = max(len(n) for n in names)
+    header = " ".join(f"{c:>12s}" for c in cols)
+    print(f"{'row':<{w}s} {header}  (us_per_call)")
+    for n in names:
+        cells = " ".join(
+            f"{rows[n]:>12.1f}" if n in rows else f"{'—':>12s}"
+            for _, _, rows in hist)
+        print(f"{n:<{w}s} {cells}")
+    geo = " ".join(f"{geomean(rows.values()):>12.1f}" for _, _, rows in hist)
+    print(f"{'geomean':<{w}s} {geo}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*", default=None,
+                    help="baseline JSON files (default: BENCH_*.json)")
+    ap.add_argument("--csv", action="store_true",
+                    help="machine-readable long-format output")
+    args = ap.parse_args(argv)
+    files = args.files or sorted(glob.glob("BENCH_*.json"))
+    if not files:
+        print("bench_trend: no BENCH_*.json baselines found")
+        return 1
+    for path in files:
+        render(path, history(path), args.csv)
+    return 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except BrokenPipeError:  # e.g. `| head` — not an error
+        os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+        sys.exit(0)
