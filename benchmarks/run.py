@@ -29,6 +29,9 @@ override, ``engine_compare`` additionally honors ``--ell``):
                             | recoloring, per batch size       |
   kernel_firstfit           | Pallas firstfit + fused round    | 13
                             | engines vs sort engine           |
+  serve_bench               | async service under open-loop    | 10
+                            | mixed-tenant load: p50/p99,      |
+                            | hit rate, deadline-bound ages    |
   comm_schedule             | coloring-scheduled all-to-all    | (none)
 
 ``--json out.json`` additionally writes every row machine-readably
@@ -430,6 +433,144 @@ def stream_compare(scale=10, concurrency=64, batch_fracs=(0.001, 0.01, 0.1)):
                      recompiles=dyn.recompiles)
 
 
+def serve_bench(scale=10, requests=48, tenants=3, max_batch=8):
+    """Async coloring service under open-loop mixed-tenant load (the
+    ISSUE-7 tentpole claim): Poisson arrivals from ``tenants`` coloring
+    tenants plus one streaming tenant submitting edge-delta batches, all
+    through the bounded-admission + deficit-round-robin + deadline-flush
+    scheduler (repro.serve.coloring.AsyncColoringService). The plan cache
+    is warmed off-clock, so the load measures serving, not compilation.
+
+    The gated ``us_per_call`` is flush EXECUTION time per request
+    (``exec_s / requests``) — a machine-speed-scaling quantity — NOT the
+    end-to-end latency, which is deadline-dominated by construction
+    (waiting out a 5ms flush budget is invariant across machines and
+    would poison the bench gate's median normalization). p50/p99 latency,
+    cache hit rate, the flush-reason histogram and max queue age ride the
+    JSON fields instead.
+
+    Asserted per family: every served coloring is valid, AND the deadline
+    guarantee holds — no request's queue age exceeded the flush budget
+    plus in-flight-flush stall (a few ``max_exec_s``) plus scheduler slop.
+    Arrival rate and deadline are CALIBRATED against the measured warm
+    flush cost (~50% utilization, deadline = one max_batch's worth of
+    work), so the load — and the age-bound assertion — is meaningful on
+    any machine speed rather than trivially over- or under-saturated.
+    """
+    from repro.core import ColoringSpec
+    from repro.serve.coloring import AdmissionError, AsyncColoringService
+    print(f"\n== serve bench: open-loop mixed-tenant async serving "
+          f"(scale {scale}, {requests} req x {tenants} tenants + 1 stream, "
+          f"batch {max_batch}, calibrated deadline) ==")
+    for name in GRAPHS:
+        spec = ColoringSpec(strategy="iterative", engine="sort",
+                            concurrency=64)
+        graphs = [rmat.paper_graph(name, scale=scale, seed=s)
+                  for s in range(requests)]
+        svc = AsyncColoringService(
+            default_spec=spec, max_batch=max_batch, max_delay_s=1.0,
+            max_queue_depth=4 * max_batch * (tenants + 1))
+        # warm every envelope off-clock — compile AND trace both serving
+        # paths (single call + the fixed-shape padded map the flush uses):
+        # the load measures serving, not compilation. The warm map cost
+        # calibrates the open-loop rate below.
+        by_env = {}
+        for g in graphs:
+            by_env.setdefault(svc.plans.envelope(spec, g), g)
+        t_req = 0.0
+        for env, g in by_env.items():
+            plan, _, _ = svc.plans.get(spec, env)
+            plan(g)
+            plan.map([g] * max_batch)
+            t0 = time.perf_counter()
+            plan.map([g] * max_batch)
+            t_req = max(t_req,
+                        (time.perf_counter() - t0) / max_batch)
+        # deadline = one full batch's worth of serving; arrivals at ~50%
+        # utilization -> a mix of size flushes (bursts) and deadline
+        # flushes (lulls), never steady-state overload
+        deadline_s = max_batch * t_req
+        svc.max_delay_s = deadline_s
+        g0 = graphs[0]
+        dyn = svc.open_stream("stream", g0,
+                              ColoringSpec(strategy="recolor", engine="sort",
+                                           concurrency=64, max_rounds=256))
+        # prime the stream's warm-start trace: one conflicting edge insert
+        # (two same-colored endpoints always exist: colors < |V|)
+        c = np.asarray(dyn.colors)
+        u = int(np.argmax(np.bincount(c) >= 2))
+        uu, vv = np.flatnonzero(c == u)[:2]
+        dyn.apply_batch(inserts=[[int(uu), int(vv)]])
+        rng = np.random.default_rng(0)
+        m = max(1, g0.num_edges // 100)
+        base_edges = g0.undirected_edges()
+        deltas = [
+            (np.stack([rng.integers(0, g0.num_vertices, m),
+                       rng.integers(0, g0.num_vertices, m)], 1),
+             base_edges[rng.integers(0, base_edges.shape[0], m)])
+            for _ in range(requests // 6)]
+        arrivals = np.cumsum(rng.exponential(2.0 * t_req, requests))
+
+        t0 = time.perf_counter()
+        handles, di = [], 0
+        i = 0
+        while i < requests:
+            if time.perf_counter() - t0 >= arrivals[i]:
+                try:
+                    handles.append(
+                        svc.submit(graphs[i], tenant=f"t{i % tenants}"))
+                    if i % 6 == 5 and di < len(deltas):
+                        ins, dels = deltas[di]
+                        svc.submit_delta("stream", inserts=ins,
+                                         deletes=dels)
+                        di += 1
+                    i += 1
+                except AdmissionError:
+                    svc.pump()
+            else:
+                svc.pump()
+        svc.drain()
+        wall = time.perf_counter() - t0
+
+        for h, g in zip(handles, graphs):
+            assert validate_coloring(g, h.result().report.colors), name
+        dyn = svc.stream("stream")
+        assert validate_coloring(dyn.graph, dyn.colors), name
+        snap = svc.metrics.snapshot()
+        cum, win = snap["cumulative"], snap["window"]
+        # the deadline-flush guarantee, asserted on the real clock: queue
+        # age is bounded by budget + in-flight-flush stall + slop (pump
+        # flushes due batches serially, so a batch can wait out a few
+        # earlier flushes)
+        age_bound = deadline_s + 5 * cum["max_exec_s"] + 0.05
+        assert cum["max_queue_age_s"] <= age_bound, (
+            f"{name}: max queue age {cum['max_queue_age_s']:.4f}s exceeds "
+            f"deadline bound {age_bound:.4f}s")
+        us_exec = cum["exec_s"] / cum["requests"] * 1e6
+        _row(f"serve/{name}/mixed", us_exec,
+             f"p50={win['p50_ms']:.1f}ms;p99={win['p99_ms']:.1f}ms;"
+             f"hit_rate={snap['cache_hit_rate']:.2f};"
+             f"flushes={cum['flushes']};"
+             f"reasons={cum['flush_reasons']};"
+             f"max_age={cum['max_queue_age_s'] * 1e3:.1f}ms;"
+             f"gps={cum['requests'] / wall:.1f}",
+             p50_ms=round(win["p50_ms"], 2),
+             p99_ms=round(win["p99_ms"], 2),
+             max_ms=round(win["max_ms"], 2),
+             cache_hit_rate=round(snap["cache_hit_rate"], 3),
+             flushes=cum["flushes"],
+             flush_reasons=cum["flush_reasons"],
+             batched_requests=cum["batched_requests"],
+             stream_deltas=cum["stream_deltas"],
+             rejected=cum["rejected"],
+             retraces=cum["retraces"],
+             max_queue_age_ms=round(cum["max_queue_age_s"] * 1e3, 2),
+             deadline_ms=round(deadline_s * 1e3, 2),
+             age_bound_ms=round(age_bound * 1e3, 2),
+             requests=cum["requests"], tenants=tenants,
+             throughput_rps=round(cum["requests"] / wall, 1))
+
+
 def kernel_firstfit(scale=13):
     print(f"\n== Pallas firstfit/fused engines vs sort-mex engine "
           f"(scale {scale}) ==")
@@ -479,6 +620,7 @@ FAMILIES = {
     "frontier_compare": (lambda a, s: frontier_compare(scale=s), 13),
     "stream_compare": (lambda a, s: stream_compare(scale=s), 10),
     "kernel_firstfit": (lambda a, s: kernel_firstfit(scale=s), 13),
+    "serve_bench": (lambda a, s: serve_bench(scale=s), 10),
     "comm_schedule": (lambda a, s: comm_schedule_bench(), None),
 }
 

@@ -127,6 +127,30 @@ class ColoringSpec:
         """Resolve the registered pieces (strategy, mex backend) by name."""
         return get_strategy(self.strategy), get_backend(self.engine)
 
+    def to_dict(self) -> dict:
+        """JSON-able export (the checkpoint/restore wire format): every
+        field by registry *name*, so a restored process resolves them
+        against its own registries. Mesh-bound specs are process-local
+        (device handles don't serialize) and are rejected."""
+        if self.mesh is not None:
+            raise ValueError(
+                "mesh-bound specs are process-local and cannot be "
+                "serialized; rebuild the spec with the restoring "
+                "process's mesh instead")
+        d = {f.name: getattr(self, f.name)
+             for f in dataclasses.fields(self) if f.name != "mesh"}
+        if not isinstance(d["strategy"], str):
+            d["strategy"] = get_strategy(d["strategy"]).name
+        if not isinstance(d["engine"], str):
+            d["engine"] = get_backend(d["engine"]).name
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ColoringSpec":
+        """Inverse of :meth:`to_dict` — unknown keys are rejected by the
+        dataclass constructor, so a stale checkpoint fails loudly."""
+        return cls(**d)
+
 
 # --------------------------------------------------------------------------
 # the report

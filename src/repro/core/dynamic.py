@@ -97,19 +97,7 @@ class DynamicColoring:
                  *, edge_headroom: float = 1.5,
                  degree_headroom: float = 1.5,
                  plan_shape: Optional[PlanShape] = None):
-        spec = ColoringSpec(strategy="recolor") if spec is None else spec
-        if get_strategy(spec.strategy).name != "recolor":
-            raise ValueError(
-                "DynamicColoring needs the 'recolor' strategy (got "
-                f"{spec.strategy!r}); other strategies have no warm start")
-        if spec.model != "d1":
-            raise ValueError(
-                "DynamicColoring is distance-1 only: under d2/pd2 an edge "
-                "delta perturbs constraints beyond its endpoints, so the "
-                "endpoint seed would under-repair")
-        if spec.ordering != "natural":
-            raise ValueError("DynamicColoring repairs in place; ordering "
-                             "must be 'natural'")
+        spec = self._check_spec(spec)
         self.spec = spec
         self._graph = graph
         self._edge_headroom = float(edge_headroom)
@@ -123,6 +111,23 @@ class DynamicColoring:
         self._colors = np.asarray(self._plan(graph).colors)
 
     # -------------------------------------------------------------- plumbing
+    @staticmethod
+    def _check_spec(spec: Optional[ColoringSpec]) -> ColoringSpec:
+        spec = ColoringSpec(strategy="recolor") if spec is None else spec
+        if get_strategy(spec.strategy).name != "recolor":
+            raise ValueError(
+                "DynamicColoring needs the 'recolor' strategy (got "
+                f"{spec.strategy!r}); other strategies have no warm start")
+        if spec.model != "d1":
+            raise ValueError(
+                "DynamicColoring is distance-1 only: under d2/pd2 an edge "
+                "delta perturbs constraints beyond its endpoints, so the "
+                "endpoint seed would under-repair")
+        if spec.ordering != "natural":
+            raise ValueError("DynamicColoring repairs in place; ordering "
+                             "must be 'natural'")
+        return spec
+
     def _envelope(self, graph: Graph) -> PlanShape:
         """Headroomed envelope on the pad_bucket ladder: deltas that stay
         inside it ride one compiled program. The edge floor (one minimum
@@ -222,3 +227,58 @@ class DynamicColoring:
         report = self._plan(self._graph)
         self._colors = np.asarray(report.colors)
         return report
+
+    # -------------------------------------------------------- checkpointing
+    def state_dict(self) -> dict:
+        """The complete streaming state as a flat dict of host arrays — a
+        pytree ``repro.train.checkpoint.save`` writes verbatim. Everything
+        a bit-identical resume needs is here: the canonical undirected
+        edge set (``Graph.from_edges`` round-trips it to the SAME CSR —
+        both sides are lexsort-canonical), the committed colors, the plan
+        envelope (so the restored program is compiled against the same
+        static shapes), and the stream counters. The spec is NOT included
+        (not an array): serialize it separately via
+        :meth:`repro.core.api.ColoringSpec.to_dict`."""
+        st = self._plan.statics
+        return {
+            "edges": self._graph.undirected_edges().astype(np.int64),
+            "colors": self._colors.astype(np.int32),
+            "num_vertices": np.int64(self._graph.num_vertices),
+            "max_degree_seen": np.int64(self.max_degree_seen),
+            "recompiles": np.int64(self.recompiles),
+            "envelope": np.asarray(
+                [st.num_vertices, st.padded_edges, st.max_degree], np.int64),
+            "pinned": np.int64(self._pinned_shape is not None),
+            "headroom": np.asarray(
+                [self._edge_headroom, self._degree_headroom], np.float64),
+        }
+
+    @classmethod
+    def from_state(cls, state: dict,
+                   spec: Optional[ColoringSpec] = None) -> "DynamicColoring":
+        """Rebuild a live stream from :meth:`state_dict` output — WITHOUT
+        rerunning the cold start: the committed colors are restored as-is,
+        and the plan recompiles against the checkpointed envelope, so
+        every delta batch after the restore produces bit-identical colors
+        to the unkilled run (pinned by ``tests/test_serve_faults.py``)."""
+        spec = cls._check_spec(spec)
+        self = cls.__new__(cls)
+        self.spec = spec
+        V = int(state["num_vertices"])
+        self._graph = Graph.from_edges(
+            V, np.asarray(state["edges"]).reshape(-1, 2))
+        colors = np.asarray(state["colors"]).astype(np.int32)
+        if colors.shape != (V,):
+            raise ValueError(f"checkpointed colors shape {colors.shape} "
+                             f"!= ({V},)")
+        hr = np.asarray(state["headroom"], np.float64)
+        self._edge_headroom, self._degree_headroom = float(hr[0]), float(hr[1])
+        env = [int(x) for x in np.asarray(state["envelope"])]
+        shape = PlanShape(num_vertices=env[0], padded_edges=env[1],
+                          max_degree=env[2])
+        self._pinned_shape = shape if int(state["pinned"]) else None
+        self.recompiles = int(state["recompiles"])
+        self.max_degree_seen = int(state["max_degree_seen"])
+        self._plan = self._compile(shape)
+        self._colors = colors
+        return self

@@ -4,7 +4,10 @@
         --batch 8 --prompt-len 64 --gen 32
 
 Serving-path features: prefill-then-decode cache contract (tested per arch),
-greedy/temperature sampling, per-sequence cur_len, throughput report.
+greedy/temperature sampling, per-sequence cur_len, throughput report plus
+per-token decode latency percentiles via the shared serving metrics
+tracker (repro.serve.metrics.WindowedMetrics — the same instrument the
+coloring service exports).
 """
 from __future__ import annotations
 
@@ -58,18 +61,33 @@ def main(argv=None):
     key = jax.random.PRNGKey(1)
     tok = sample(logits[:, -1], key, args.temperature)
 
+    from ..serve.metrics import WindowedMetrics
+    metrics = WindowedMetrics()
+
     out = [tok]
     t0 = time.time()
     for i in range(args.gen - 1):
+        ts = time.perf_counter()
         key, sub = jax.random.split(key)
         logits_i, caches = step(params, caches, tok)
         tok = sample(logits_i, sub, args.temperature)
+        tok.block_until_ready()
+        dt = time.perf_counter() - ts
+        # one decode step == one size-1 "batch" flush: the first step
+        # carries the jit trace, which the max/p99 split makes visible
+        metrics.record_flush("size", latencies=[dt], queue_ages=[0.0],
+                             exec_s=dt, batched=True)
         out.append(tok)
     decode_s = time.time() - t0
     gen = np.stack([np.asarray(t_) for t_ in out], axis=1)
+    win = metrics.snapshot()["window"]
     print(f"[serve] arch={cfg.name} batch={b} prompt={t} gen={args.gen}")
     print(f"[serve] prefill: {prefill_s:.2f}s ({b*t/max(prefill_s,1e-9):.0f} tok/s)")
     print(f"[serve] decode:  {decode_s:.2f}s ({b*(args.gen-1)/max(decode_s,1e-9):.1f} tok/s)")
+    if win["count"]:
+        print(f"[serve] decode step latency: p50={win['p50_ms']:.1f}ms "
+              f"p99={win['p99_ms']:.1f}ms max={win['max_ms']:.1f}ms "
+              f"(max = the jit trace)")
     print(f"[serve] sample row: {gen[0][:16].tolist()}")
     return gen
 

@@ -2,12 +2,18 @@
 
 Two lanes:
 
-* **Coloring service** (``repro.serve.coloring``): a batched coloring
-  server over the spec/plan front door — LRU cache of compiled
-  :class:`repro.core.api.ColoringPlan`s keyed by ``(spec, PlanShape)``
-  bucket envelope, vmapped micro-batching of same-bucket requests, and
-  latency/throughput stats. CLI smoke:
-  ``PYTHONPATH=src python -m repro.serve.coloring --smoke``.
+* **Coloring service** (``repro.serve.coloring``): serving over the
+  spec/plan front door. The sync :class:`ColoringService` keeps PR 5's
+  API (LRU plan cache keyed by ``(spec, PlanShape)`` bucket envelope,
+  vmapped micro-batching, flush-atomic stats). The production shape is
+  :class:`AsyncColoringService`: bounded admission onto per-tenant
+  queues, deficit-round-robin fairness, deadline-aware micro-batch
+  flushing (size OR age), per-tenant edge-delta streams, and
+  checkpoint/restore of the whole serving state (bit-identical resume —
+  ``tests/test_serve_faults.py``). Observability rides
+  :class:`repro.serve.metrics.WindowedMetrics` (windowed p50/p99, cache
+  hit rate, retraces, flush-reason histogram). CLI smoke:
+  ``PYTHONPATH=src python -m repro.serve --smoke``.
 * **LM serving**: the family-dispatched cache/decode primitives live in
   ``repro.models`` (`cache_spec`, `init_cache`, `decode_step`,
   `forward(..., caches=)`) so each architecture's cache layout sits next
@@ -18,14 +24,22 @@ Two lanes:
 """
 from ..models import cache_spec, init_cache, decode_step, forward
 
+_COLORING = ("ColoringService", "ServedReport", "PlanCache",
+             "AsyncColoringService", "AsyncServed", "ServeHandle",
+             "AdmissionError")
+_METRICS = ("WindowedMetrics", "FLUSH_REASONS", "RESTART_INVARIANT")
+
 __all__ = ["cache_spec", "init_cache", "decode_step", "forward",
-           "ColoringService", "ServedReport"]
+           *_COLORING, *_METRICS]
 
 
 def __getattr__(name):
     # lazy (PEP 562): keeps `python -m repro.serve.coloring` free of the
     # runpy double-import warning and the package import light
-    if name in ("ColoringService", "ServedReport"):
+    if name in _COLORING:
         from . import coloring
         return getattr(coloring, name)
+    if name in _METRICS:
+        from . import metrics
+        return getattr(metrics, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -3,7 +3,8 @@
 Layout::
 
     <dir>/step_000123/arrays.npz     flat {encoded-path: array}
-    <dir>/step_000123/manifest.json  step, keys, shapes, dtypes, checksum
+    <dir>/step_000123/manifest.json  step, keys, shapes, dtypes, checksum,
+                                     optional caller metadata (``meta=``)
     <dir>/LATEST                     text file, updated last (commit point)
 
 Guarantees used by the elastic-restart story (DESIGN.md §6):
@@ -15,7 +16,14 @@ Guarantees used by the elastic-restart story (DESIGN.md §6):
   * retention — keep-last-k pruning;
   * async — snapshot to host (device_get) synchronously, write in a
     background thread (training continues).
-"""
+
+Not train-specific: any nested dict/list tree of arrays checkpoints
+through :func:`save`. Consumers that don't hold a live prototype tree
+(the coloring service restoring after a kill knows nothing but the
+directory) use :func:`load`, which rebuilds a plain nested-dict tree from
+the flat paths alone and returns the manifest — including the ``meta``
+JSON the writer attached (specs, schema versions, ...). Dict keys must
+avoid ``/`` and ``__`` (the path separator and its npz encoding)."""
 from __future__ import annotations
 
 import hashlib
@@ -62,10 +70,19 @@ def step_dir(root: str, step: int) -> str:
 
 
 def save(root: str, step: int, tree, *, keep: int = 3,
-         async_write: bool = False) -> threading.Thread | None:
-    """Checkpoint ``tree`` (any nested dict/list of arrays) at ``step``."""
+         async_write: bool = False,
+         meta: Optional[dict] = None) -> threading.Thread | None:
+    """Checkpoint ``tree`` (any nested dict/list of arrays) at ``step``.
+
+    ``meta``: optional JSON-able dict stored in the manifest and returned
+    by :func:`load` — the place for non-array state (serialized specs,
+    schema versions) that must survive alongside the arrays."""
     os.makedirs(root, exist_ok=True)
     flat = _flatten(tree)
+    bad = [k for k in flat if "__" in k]
+    if bad:
+        raise ValueError(f"checkpoint keys must not contain '__' (the npz "
+                         f"path encoding): {bad[:3]}")
     host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
     # npz can't represent ml_dtypes (bf16 etc.) — store a byte-compatible
     # view and record the true dtype in the manifest for restore
@@ -93,6 +110,8 @@ def save(root: str, step: int, tree, *, keep: int = 3,
             "dtypes": true_dtypes,
             "checksum": digest.hexdigest(),
         }
+        if meta is not None:
+            manifest["meta"] = meta
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
             f.flush()
@@ -154,6 +173,17 @@ def restore(root: str, proto, *, step: Optional[int] = None,
     device_put with the *current* mesh (elastic restart onto a different
     topology). Returns (tree, step).
     """
+    flat, manifest, step = _load_flat(root, step, verify)
+    tree = _unflatten_into(flat, proto)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree, step
+
+
+def _load_flat(root: str, step: Optional[int], verify: bool):
+    """Shared loader: flat path->array dict + manifest, checksum-verified,
+    dtypes restored (bf16 stand-ins viewed back)."""
     if step is None:
         step = latest_step(root)
         if step is None:
@@ -175,8 +205,22 @@ def restore(root: str, proto, *, step: Optional[int] = None,
     for k, dt in manifest.get("dtypes", {}).items():
         if k in flat and str(flat[k].dtype) != dt:
             flat[k] = flat[k].view(np.dtype(dt))
-    tree = _unflatten_into(flat, proto)
-    if shardings is not None:
-        tree = jax.tree.map(
-            lambda x, s: jax.device_put(x, s), tree, shardings)
-    return tree, step
+    return flat, manifest, step
+
+
+def load(root: str, *, step: Optional[int] = None, verify: bool = True):
+    """Structure-free restore: rebuild a nested **dict** tree from the flat
+    paths alone (list/tuple nodes written by :func:`save` come back as
+    dicts keyed by their stringified index) and return
+    ``(tree, manifest, step)`` — ``manifest["meta"]`` carries whatever the
+    writer attached. The restart path for consumers that hold no live
+    prototype (e.g. a killed coloring service)."""
+    flat, manifest, step = _load_flat(root, step, verify)
+    tree: dict = {}
+    for path, arr in flat.items():
+        node = tree
+        parts = path.split(_SEP)
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return tree, manifest, step

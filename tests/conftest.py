@@ -25,3 +25,30 @@ def arch_params(arch_ids, slow_set=SLOW_ARCHS, extra_marks=None):
         marks += (extra_marks or {}).get(a, [])
         out.append(pytest.param(a, marks=marks) if marks else a)
     return out
+
+
+class FakeClock:
+    """A deterministic monotonic clock for timing-sensitive tests.
+
+    Inject as ``clock=`` into the serving layer (``ColoringService``,
+    ``AsyncColoringService``, ``WindowedMetrics``) so deadline-flush and
+    latency-percentile tests never ``sleep`` in tier-1: time advances only
+    when the test says so (``tick``), and every latency/queue-age sample
+    becomes an exact, assertable number."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def tick(self, dt: float) -> float:
+        """Advance time by ``dt`` seconds and return the new reading."""
+        self.t += float(dt)
+        return self.t
+
+
+@pytest.fixture
+def fake_clock():
+    """A fresh :class:`FakeClock` at t=0."""
+    return FakeClock()

@@ -106,8 +106,11 @@ def test_cli_smoke(capsys):
                       "--scale", "7", "--stream-batches", "1"])
     out = capsys.readouterr().out
     assert "[serve] served 4 requests" in out
+    assert "bit-identical colors=True" in out
     assert "streaming done" in out
-    assert svc.stats()["requests"] == 4
+    cum = svc.metrics.snapshot()["cumulative"]
+    assert cum["requests"] == 4 + 1  # 4 coloring requests + 1 stream delta
+    assert cum["stream_deltas"] == 1
 
 
 def test_cache_size_validation():
@@ -138,3 +141,42 @@ def test_latency_window_is_bounded():
     st = svc.stats()
     assert st["requests"] == 5          # lifetime counter
     assert st["latency"]["count"] == 3  # window-bounded percentiles
+
+
+def test_stats_commit_is_per_flush_not_per_enqueue(fake_clock):
+    """The atomicity pin (deterministic, no threads): stats used to mutate
+    per request inside color_batch, so a reader racing the flush saw
+    half-updated counters (requests ahead of latencies, a micro-batch
+    counted before its members). Now every counter for a flush commits in
+    ONE _commit call — probed here by snapshotting stats() from *inside*
+    the flush via the injected clock: no probe may ever observe counters
+    that moved mid-flush."""
+    probes = []
+    box = []
+
+    def clock():
+        if box:
+            st = box[0].stats()
+            probes.append((st["requests"], st["latency"]["count"],
+                           st["micro_batches"]))
+        fake_clock.tick(0.001)
+        return fake_clock.t
+
+    # recolor doesn't support plan.map -> the loop path, which calls the
+    # clock between every request in the flush (max probe coverage)
+    svc = ColoringService(default_spec=ColoringSpec(strategy="recolor",
+                                                    concurrency=16),
+                          clock=clock)
+    box.append(svc)
+    gs = _graphs(4, scale=7)
+    served = svc.color_batch(gs)
+    # every in-flight probe saw the PRE-flush state: nothing moves until
+    # the single commit at flush end
+    assert probes and all(p == (0, 0, 0) for p in probes)
+    st = svc.stats()
+    assert st["requests"] == 4 and st["latency"]["count"] == 4
+    # and the injected clock makes latencies exact: first request carries
+    # the plan lookup (2 ticks), the rest one tick each
+    lats = [s.latency_s for s in served]
+    assert lats[0] == pytest.approx(0.002)
+    assert lats[1:] == pytest.approx([0.001] * 3)

@@ -14,10 +14,14 @@ does not. (The median is taken across pairs precisely so a whole-family
 regression cannot normalize itself away — run the gate with >= 2 pairs.)
 
 Usage:
-  python tools/bench_gate.py [--tolerance 0.25] BASELINE:CURRENT [...]
+  python tools/bench_gate.py [--tolerance 0.25] [BASELINE:CURRENT ...]
 e.g.
   python tools/bench_gate.py BENCH_engine_compare.json:fresh_engine.json \
       BENCH_frontier_compare.json:fresh_frontier.json
+
+With no pairs, the DEFAULT GATED SET runs: every family the repo commits
+a pinned-scale baseline for, against the ``fresh_<family>.json`` files a
+prior ``benchmarks/run.py`` step produced (the CI bench-gate layout).
 """
 from __future__ import annotations
 
@@ -26,6 +30,17 @@ import json
 import math
 import statistics
 import sys
+
+# the default gated set: committed baseline -> fresh rerun. Every family
+# added here must commit its BENCH_*.json at the pinned scale and emit
+# only machine-speed-scaling us_per_call rows (serve_bench gates flush
+# execution time per request, NOT its deadline-dominated latencies, which
+# are machine-invariant and would poison the median normalization).
+DEFAULT_PAIRS = [
+    ("BENCH_engine_compare.json", "fresh_engine_compare.json"),
+    ("BENCH_frontier_compare.json", "fresh_frontier_compare.json"),
+    ("BENCH_serve_bench.json", "fresh_serve_bench.json"),
+]
 
 
 def load_rows(path: str) -> dict:
@@ -82,16 +97,20 @@ def gate(matched, tolerance: float):
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("pairs", nargs="+", metavar="BASELINE:CURRENT",
-                    help="baseline/current JSON path pairs, colon-separated")
+    ap.add_argument("pairs", nargs="*", metavar="BASELINE:CURRENT",
+                    help="baseline/current JSON path pairs, colon-separated "
+                         "(default: the committed gated set vs fresh_*.json)")
     ap.add_argument("--tolerance", type=float, default=0.25,
                     help="allowed normalized geomean regression (0.25 = 25%%)")
     args = ap.parse_args(argv)
-    pairs = []
-    for p in args.pairs:
-        if ":" not in p:
-            ap.error(f"expected BASELINE:CURRENT, got {p!r}")
-        pairs.append(tuple(p.split(":", 1)))
+    if not args.pairs:
+        pairs = list(DEFAULT_PAIRS)
+    else:
+        pairs = []
+        for p in args.pairs:
+            if ":" not in p:
+                ap.error(f"expected BASELINE:CURRENT, got {p!r}")
+            pairs.append(tuple(p.split(":", 1)))
     failures, lines = gate(match_pairs(pairs), args.tolerance)
     print("\n".join(lines))
     if failures:
