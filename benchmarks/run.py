@@ -672,12 +672,24 @@ def main() -> None:
                     help="also write every row machine-readably (name, "
                          "us_per_call, per-family structured fields) — the "
                          "format CI archives as the perf trajectory")
+    ap.add_argument("--verify", action="store_true",
+                    help="run the repro.analysis registry sweep against the "
+                         "committed baseline before timing anything (off by "
+                         "default — the CI slow lane turns it on): a "
+                         "benchmark of a plan the analyzer rejects is a "
+                         "number about broken code")
     args = ap.parse_args()
     selected = (list(FAMILIES) if args.families is None
                 else [f.strip() for f in args.families.split(",") if f.strip()])
     unknown = [f for f in selected if f not in FAMILIES]
     if unknown:
         ap.error(f"unknown families {unknown}; known: {', '.join(FAMILIES)}")
+    if args.verify:
+        from repro.analysis import dedupe, sweep_registry, verify_findings
+        print("verify: sweeping the strategy x engine x model registry...",
+              flush=True)
+        verify_findings(dedupe(sweep_registry()), mode="error")
+        print("verify: clean against the committed baseline")
     print("name,us_per_call,derived")
     run_families(selected, args, json_path=args.json)
     print("\n-- CSV --")

@@ -1,0 +1,112 @@
+"""``python -m repro.analysis`` — sweep the full registry against the
+committed baseline.
+
+Runs every strategy x engine x model combination through the plan-level
+passes (races, envelope leaks, budgets) plus the source-level passes
+(retrace AST lint, dead-export scan), dedupes by fingerprint, and compares
+against ``repro/analysis/baseline.json``:
+
+* exit 0 — every gating finding is allowlisted and no baseline entry is
+  stale;
+* exit 1 — new violations (fix the code or extend the baseline with a
+  reason string) and/or stale entries (baseline drift: remove them).
+
+``--write-baseline`` regenerates the entry list from the current run,
+preserving reason strings for fingerprints that already have one and
+stamping ``TODO: justify`` on new ones — the file is meant to be
+hand-annotated before committing, and the loader rejects empty reasons.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from . import (AnalysisConfig, SWEEP_ENGINES, SWEEP_MODELS, SWEEP_STRATEGIES,
+               dedupe, lint_tree, load_baseline, save_baseline,
+               split_by_severity, sweep_registry, compare)
+
+
+def _csv(text):
+    return tuple(s.strip() for s in text.split(",") if s.strip())
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static analysis sweep over the coloring registry")
+    ap.add_argument("--strategies", type=_csv, default=SWEEP_STRATEGIES,
+                    help="comma list (default: all registered)")
+    ap.add_argument("--engines", type=_csv, default=SWEEP_ENGINES)
+    ap.add_argument("--models", type=_csv, default=SWEEP_MODELS)
+    ap.add_argument("--no-source", action="store_true",
+                    help="skip the source-level passes (AST lint, dead "
+                         "exports); plan sweep only")
+    ap.add_argument("--vmem-ceiling", type=int, default=None,
+                    help="per-grid-step VMEM budget in bytes "
+                         "(default 16 MiB)")
+    ap.add_argument("--baseline", default=None,
+                    help="allowlist path (default: the committed "
+                         "repro/analysis/baseline.json)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="regenerate the baseline from this run "
+                         "(hand-annotate reasons before committing)")
+    ap.add_argument("--json", dest="json_path", default=None,
+                    help="dump every finding (pre-baseline) as JSON")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="also print info-grade and allowlisted findings")
+    args = ap.parse_args(argv)
+
+    config = AnalysisConfig(vmem_ceiling_bytes=args.vmem_ceiling,
+                            baseline_path=args.baseline)
+    findings = sweep_registry(
+        strategies=args.strategies, engines=args.engines, models=args.models,
+        config=config,
+        progress=lambda ctx: print(f"  analyzing {ctx}", file=sys.stderr))
+    if not args.no_source:
+        findings = dedupe(findings + lint_tree())
+
+    if args.json_path:
+        with open(args.json_path, "w", encoding="utf-8") as f:
+            json.dump([{"code": x.code, "site": x.site,
+                        "severity": x.severity, "message": x.message,
+                        "context": x.context} for x in findings], f, indent=2)
+
+    errors, warnings_, infos = split_by_severity(findings)
+    print(f"{len(findings)} finding(s): {len(errors)} error, "
+          f"{len(warnings_)} warning, {len(infos)} info")
+
+    if args.write_baseline:
+        old = {}
+        try:
+            old = load_baseline(args.baseline)
+        except ValueError:
+            pass  # regenerating a malformed baseline is the point
+        entries = {f.fingerprint: old.get(f.fingerprint, "TODO: justify")
+                   for f in errors + warnings_}
+        save_baseline(entries, args.baseline)
+        print(f"wrote {len(entries)} baseline entr(ies); annotate any "
+              "'TODO: justify' reasons before committing")
+        return 0
+
+    baseline = load_baseline(args.baseline)
+    new, allowed, stale = compare(findings, baseline)
+    if args.verbose:
+        for f in infos:
+            print(f.format())
+        for f in allowed:
+            print(f"allowed {f.format()}")
+    for f in new:
+        print(f"NEW     {f.format()}")
+    for fp in stale:
+        print(f"STALE   baseline entry {fp} matches nothing — remove it")
+    if new or stale:
+        print(f"FAIL: {len(new)} new violation(s), {len(stale)} stale "
+              "baseline entr(ies)")
+        return 1
+    print(f"clean: {len(allowed)} allowlisted, {len(infos)} info")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,187 @@
+"""Budget checker: packed-entry bit fields, int32 index arithmetic, and
+per-BlockSpec VMEM footprints.
+
+Three resource envelopes that fail *silently* when exceeded — no exception,
+just corrupt colorings or a Mosaic OOM at launch:
+
+* **bit budget** (BIT001/BIT002) — the fused-round packed entry
+  (:mod:`repro.kernels.round_fused`) holds the color in bits 0..27;
+  ``FORBID_BIT`` is bit 28 and ``CONFLICT_BIT`` bit 29. A caller-asserted
+  ``color_bound >= 2^28`` (or a ``words=`` override providing that many
+  color slots) lets a legal color value alias the predicate bits: a color
+  equal to ``FORBID_BIT`` would forbid nothing and conflict with
+  everything. :func:`repro.core.engine._resolve_words` now rejects this at
+  bind time (the PR-8 satellite); this pass reports it statically, before
+  any program runs.
+* **index width** (IDX001/IDX002) — ELL slab addressing computes
+  ``row * D + slot`` in int32; ``(V+1) * max_degree >= 2^31`` wraps
+  negative and scatters corrupt. Same for edge-list capacities.
+* **VMEM footprint** (VMEM001) — per grid step, a Pallas kernel holds its
+  BlockSpec blocks, scratch buffers, and the largest traced intermediate
+  in VMEM (~16 MiB/core on current TPUs). The estimate reads the REAL
+  geometry from the traced ``pallas_call`` equations (block shapes from
+  ``grid_mapping``, scratch from the kernel jaxpr's trailing invars,
+  intermediates from the kernel body's avals); the kernels also declare a
+  closed-form model (``firstfit.vmem_estimate`` / ``round_fused.
+  vmem_estimate``) used for spec-level checks before anything is traced —
+  the forbidden-bitset scratch scales with ``words`` ~ ``max_degree/32``,
+  so a high-degree plan can breach the ceiling with default block shapes.
+
+The ceiling is configurable: ``vmem_ceiling_bytes=`` on the entry points,
+or the ``REPRO_ANALYSIS_VMEM_CEILING`` environment variable.
+"""
+from __future__ import annotations
+
+import os
+from typing import List, Optional
+
+import numpy as np
+
+from .findings import Finding
+from .jaxpr_walk import aval_bytes, site_of, walk_eqns
+
+INT32_MAX = np.iinfo(np.int32).max
+
+DEFAULT_VMEM_CEILING = int(os.environ.get(
+    "REPRO_ANALYSIS_VMEM_CEILING", 16 * 1024 * 1024))
+
+
+def _packed_color_capacity() -> int:
+    """Highest color value the packed entry can represent (2^28 - 1)."""
+    from ..kernels.round_fused import COLOR_MASK
+    return int(COLOR_MASK)
+
+
+def check_spec_budgets(spec, statics, *, backend=None,
+                       vmem_ceiling: Optional[int] = None,
+                       context: str = "") -> List[Finding]:
+    """Spec/shape-level budget audit — needs no tracing, so it runs even
+    for plans that would fail to compile.
+
+    ``spec`` is a :class:`repro.core.api.ColoringSpec`; ``statics`` a
+    :class:`repro.core.api.PlanShape` (constraint-graph space); ``backend``
+    the resolved :class:`repro.core.engine.MexBackend` (resolved from the
+    spec when omitted).
+    """
+    from ..core.engine import get_backend, num_color_words
+
+    findings: List[Finding] = []
+    ceiling = DEFAULT_VMEM_CEILING if vmem_ceiling is None else vmem_ceiling
+    backend = get_backend(spec.engine) if backend is None else backend
+    cap = _packed_color_capacity()
+
+    V = int(statics.num_vertices)
+    D = max(1, int(statics.max_degree))
+    eff_colors = D + 1
+    if int(spec.color_bound) > 0:
+        eff_colors = min(eff_colors, int(spec.color_bound))
+
+    # --- bit budget --------------------------------------------------------
+    if int(spec.color_bound) > cap:
+        findings.append(Finding(
+            "BIT001", "core/api.py:ColoringSpec",
+            f"color_bound={spec.color_bound} exceeds the packed-entry "
+            f"color field (bits 0..27, max {cap}): a color at "
+            f"{cap + 1} IS the FORBID bit — table backends reject this "
+            "at bind time, and no engine can represent it", context))
+    elif statics.max_degree + 1 > cap:
+        findings.append(Finding(
+            "BIT001", "core/api.py:PlanShape",
+            f"max_degree={statics.max_degree} admits colors above the "
+            f"packed-entry color field (max {cap})", context))
+    words_override = getattr(backend, "words", None)
+    if words_override and 32 * int(words_override) - 1 > cap \
+            and getattr(backend, "needs_ell", False):
+        findings.append(Finding(
+            "BIT002", f"core/engine.py:{type(backend).__name__}",
+            f"words={words_override} provides {32 * int(words_override)} "
+            f"color slots, beyond the packed-entry field (max {cap})",
+            context))
+
+    # --- int32 index arithmetic -------------------------------------------
+    if getattr(backend, "needs_ell", False) and (V + 1) * D > INT32_MAX:
+        findings.append(Finding(
+            "IDX001", "core/engine.py:bind",
+            f"ELL slab (V+1)*D = {(V + 1) * D} overflows int32 "
+            "(row*width+slot addressing wraps negative)", context))
+    if int(statics.padded_edges) > INT32_MAX:
+        findings.append(Finding(
+            "IDX002", "core/api.py:PlanShape",
+            f"padded_edges={statics.padded_edges} overflows int32 edge "
+            "indexing", context))
+
+    # --- declared-geometry VMEM model -------------------------------------
+    if getattr(backend, "needs_ell", False):
+        words = int(words_override) if words_override else \
+            num_color_words(eff_colors)
+        est, site = _declared_estimate(backend, words)
+        if est > ceiling:
+            findings.append(Finding(
+                "VMEM001", site,
+                f"declared per-grid-step VMEM estimate {est} B "
+                f"(words={words} from {eff_colors} colors, default blocks) "
+                f"exceeds the {ceiling} B ceiling — shrink the color bound "
+                "or the block shape", context))
+    return findings
+
+
+def _declared_estimate(backend, words: int):
+    """(bytes, site) from the kernel's own closed-form VMEM model."""
+    if backend.name == "fused_pallas":
+        from ..kernels.round_fused import vmem_estimate
+        return vmem_estimate(words=words), "kernels/round_fused.py:round_fused"
+    from ..kernels.firstfit import vmem_estimate
+    return vmem_estimate(words=words), "kernels/firstfit.py:firstfit"
+
+
+# --------------------------------------------------------------------------
+# traced-geometry VMEM pass
+# --------------------------------------------------------------------------
+def check_pallas_vmem(closed_jaxpr, *, vmem_ceiling: Optional[int] = None,
+                      context: str = "") -> List[Finding]:
+    """VMEM audit of every ``pallas_call`` in a traced program, from the
+    REAL lowered geometry (see module docstring)."""
+    ceiling = DEFAULT_VMEM_CEILING if vmem_ceiling is None else vmem_ceiling
+    findings: List[Finding] = []
+    seen = set()
+
+    def visit(eqn, enclosing):
+        if eqn.primitive.name != "pallas_call":
+            return
+        gm = eqn.params.get("grid_mapping")
+        kernel_jx = eqn.params.get("jaxpr")
+        if gm is None or kernel_jx is None:
+            return
+        block_bytes = 0
+        for bm in getattr(gm, "block_mappings", ()):
+            sd = getattr(bm, "array_shape_dtype", None)
+            if sd is not None:
+                block_bytes += int(np.prod(sd.shape) if sd.shape else 1) \
+                    * np.dtype(sd.dtype).itemsize
+        n_scratch = int(getattr(gm, "num_scratch_operands", 0))
+        scratch_bytes = sum(aval_bytes(v.aval)
+                            for v in kernel_jx.invars[len(kernel_jx.invars)
+                                                      - n_scratch:]) \
+            if n_scratch else 0
+        interm_bytes = 0
+        for keqn in kernel_jx.eqns:
+            for o in keqn.outvars:
+                interm_bytes = max(interm_bytes, aval_bytes(o.aval))
+        total = block_bytes + scratch_bytes + interm_bytes
+        name = getattr(eqn.params.get("name_and_src_info"), "name",
+                       "pallas_call")
+        site = site_of(eqn)
+        key = (site, name, total)
+        if key in seen:
+            return
+        seen.add(key)
+        if total > ceiling:
+            findings.append(Finding(
+                "VMEM001", site,
+                f"kernel {name!r} per-grid-step VMEM estimate {total} B "
+                f"(blocks {block_bytes} + scratch {scratch_bytes} + "
+                f"largest intermediate {interm_bytes}) exceeds the "
+                f"{ceiling} B ceiling", context))
+
+    walk_eqns(closed_jaxpr.jaxpr, visit)
+    return findings

@@ -1,0 +1,163 @@
+"""Typed findings — the analyzer's one output currency (DESIGN.md §Analysis).
+
+Every check in :mod:`repro.analysis` reports :class:`Finding` values; nothing
+prints, raises or warns on its own. Severity is three-valued:
+
+* ``info``    — classified and benign by construction (idempotent constant
+                stores, commutative scatter reductions, static-index writes).
+                Never gates anything; the CLI shows them under ``-v``.
+* ``warning`` — benign only under an argument the analyzer cannot make
+                itself (the paper's speculate-then-resolve model, a
+                distinctness-by-construction claim). Must be allowlisted in
+                the committed baseline WITH a reason string, or CI fails.
+* ``error``   — a genuine hazard (non-idempotent overlapping accumulation,
+                a trace-time static-arg sentinel, a bit-field overflow).
+                Also allowlistable — some hazards are accepted deliberately
+                — but the default posture is: fix it.
+
+The ``fingerprint`` (``CODE@site``) is what baselines match on. Sites are
+``<package-relative file>:<function>`` with NO line numbers, so refactors
+that move code within a function never invalidate the baseline, while
+moving a race to a new function (a new benignity argument) does.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Tuple
+
+SEVERITIES = ("info", "warning", "error")
+
+# finding-code registry: code -> (default severity, one-line meaning).
+# Codes are append-only — baselines reference them by string.
+CODES = {
+    # race classifier (races.py)
+    "RACE101": ("info", "commutative-idempotent scatter reduction "
+                        "(min/max/and/or): order-independent, benign"),
+    "RACE102": ("info", "static-index store: indices derive from "
+                        "constants/iota only — no data-driven overlap"),
+    "RACE103": ("info", "idempotent constant store: overlapping writes all "
+                        "write the same constant (the bitmap scatter-or)"),
+    "RACE104": ("info", "single-site store: one update row, trivially "
+                        "unique"),
+    "RACE300": ("warning", "speculative overlapping store: data-driven "
+                           "indices, last-writer-wins — benign ONLY under "
+                           "the paper's conflict-detected speculation model "
+                           "(allowlist with the argument)"),
+    "RACE301": ("warning", "unique_indices asserted on data-driven indices: "
+                           "undefined behavior if the assertion is ever "
+                           "violated (allowlist with the distinctness "
+                           "argument)"),
+    "RACE201": ("error", "floating-point scatter-accumulate: "
+                         "accumulation-order nondeterminism"),
+    "RACE202": ("error", "non-idempotent overlapping accumulation "
+                         "(add/mul): double-counts under speculative "
+                         "replay"),
+    # retrace-hazard lint (retrace.py)
+    "RETRACE001": ("error", "static jit arg admits a None sentinel resolved "
+                            "at trace time: the resolved value freezes into "
+                            "the jit cache (the PR-6 interpret=None class)"),
+    "RETRACE002": ("error", "static jit arg has a non-hashable default: "
+                            "every call re-traces (or raises)"),
+    "RETRACE003": ("error", "concrete data array baked into the trace as a "
+                            "constant: a closure-captured value defeats the "
+                            "plan envelope's zero-retrace guarantee"),
+    # budget checker (budgets.py)
+    "BIT001": ("error", "color bound collides with the packed-entry "
+                        "FORBID/CONFLICT bits (color field is bits 0..27)"),
+    "BIT002": ("error", "words= capacity override exceeds the packed-entry "
+                        "color field"),
+    "IDX001": ("error", "ELL slab addressing (V+1)*D overflows int32 index "
+                        "arithmetic"),
+    "IDX002": ("error", "edge-list capacity overflows int32 index "
+                        "arithmetic"),
+    "VMEM001": ("error", "kernel per-grid-step VMEM footprint estimate "
+                         "exceeds the configured ceiling"),
+    # dead-code report (deadcode.py)
+    "DEAD001": ("warning", "public export referenced nowhere outside its "
+                           "defining module"),
+    "DEAD100": ("info", "module carries a '# pending:' pragma: exports "
+                        "exempt from DEAD001 until wired up"),
+    # infrastructure
+    "ANALYSIS000": ("warning", "a program could not be traced/analyzed; "
+                               "the cell is unverified, not clean"),
+}
+
+
+class AnalysisError(RuntimeError):
+    """Raised by ``verify="error"`` paths on non-allowlisted findings."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One typed analyzer result.
+
+    code      registry key (CODES);
+    site      ``<file>:<function>`` provenance (package-relative, no line
+              numbers — the stable half of the fingerprint);
+    message   human-readable specifics (shapes, values, dtypes);
+    context   which plan produced it (``strategy/engine/model``), or the
+              analysis pass name for non-plan findings. NOT part of the
+              fingerprint: one allowlist entry covers every plan that
+              shares the site.
+    severity  defaults to the code's registry severity.
+    """
+
+    code: str
+    site: str
+    message: str
+    context: str = ""
+    severity: str = ""
+
+    def __post_init__(self):
+        if self.code not in CODES:
+            raise ValueError(f"unregistered finding code {self.code!r}")
+        if not self.severity:
+            object.__setattr__(self, "severity", CODES[self.code][0])
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"bad severity {self.severity!r}")
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.code}@{self.site}"
+
+    def format(self) -> str:
+        ctx = f" [{self.context}]" if self.context else ""
+        return f"{self.severity:7s} {self.code} {self.site}{ctx}: {self.message}"
+
+
+def dedupe(findings: Iterable[Finding]) -> List[Finding]:
+    """Collapse findings sharing a fingerprint (the same site re-traced
+    under many plans), keeping the first and folding the distinct contexts
+    into it."""
+    by_fp: dict = {}
+    order: List[str] = []
+    ctxs: dict = {}
+    for f in findings:
+        fp = f.fingerprint
+        if fp not in by_fp:
+            by_fp[fp] = f
+            order.append(fp)
+            ctxs[fp] = []
+        if f.context and f.context not in ctxs[fp]:
+            ctxs[fp].append(f.context)
+    out = []
+    for fp in order:
+        f = by_fp[fp]
+        merged = ctxs[fp]
+        ctx = merged[0] if len(merged) == 1 else (
+            f"{merged[0]} +{len(merged) - 1} more" if merged else f.context)
+        out.append(dataclasses.replace(f, context=ctx))
+    return out
+
+
+def gating(findings: Iterable[Finding]) -> List[Finding]:
+    """The findings that must be allowlisted or fixed (warning + error)."""
+    return [f for f in findings if f.severity != "info"]
+
+
+def split_by_severity(findings: Iterable[Finding]
+                      ) -> Tuple[List[Finding], List[Finding], List[Finding]]:
+    fs = list(findings)
+    return ([f for f in fs if f.severity == "error"],
+            [f for f in fs if f.severity == "warning"],
+            [f for f in fs if f.severity == "info"])

@@ -1,0 +1,142 @@
+"""Race classifier: every scatter/store in a traced coloring program,
+classified against the paper's benign-speculation model.
+
+The speculative algorithm (Çatalyürek et al. arXiv:1205.3809, Alg. 1-2) is
+*deliberately* racy: concurrent first-fit writes may collide, and
+correctness rests on every collision being (a) resolved by the later
+conflict-detection pass, or (b) idempotent/commutative so the collision
+cannot be observed at all. Rokos et al. (arXiv:1505.04086) document how an
+"optimistic" coloring silently degrades the moment a race stops being
+benign — so this pass finds every scatter op in the jaxpr and proves it
+into one of the benign classes, or reports it:
+
+=========  ========  =====================================================
+code       severity  class
+=========  ========  =====================================================
+RACE101    info      commutative-idempotent reduction (scatter-min/max/...)
+RACE102    info      static-index store (slice assignment; no data overlap)
+RACE103    info      idempotent constant store (the bitmap scatter-or)
+RACE104    info      single-site store (one update row)
+RACE300    warning   speculative last-writer-wins store — benign ONLY via
+                     the conflict-detected-later argument; allowlisted per
+                     site with the argument spelled out
+RACE301    warning   ``unique_indices=True`` on data-driven indices — UB if
+                     the distinctness claim is ever violated
+RACE201    error     float scatter-accumulate: accumulation-order
+                     nondeterminism
+RACE202    error     integer scatter-accumulate: non-idempotent overlap
+=========  ========  =====================================================
+
+The proof obligations the analyzer CAN discharge, it does (static-index,
+constant-fill, single-row — a small abstract interpretation over the
+jaxpr, :mod:`repro.analysis.jaxpr_walk`); what it cannot, it demands a
+baseline entry for, with a human-written reason string.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from .findings import Finding
+from .jaxpr_walk import (is_constant_fill, is_static, site_of, static_vars,
+                         walk_eqns)
+
+_COMMUTATIVE = frozenset({"scatter-min", "scatter-max", "scatter-and",
+                          "scatter-or", "scatter-xor"})
+_ACCUMULATING = frozenset({"scatter-add", "scatter-mul", "scatter-sub"})
+
+
+def _n_update_rows(indices_var) -> int:
+    """Number of scattered index rows; <= 1 means the store cannot
+    self-collide. Scatter indices have layout [..., index_depth]."""
+    try:
+        shape = indices_var.aval.shape
+    except Exception:
+        return 2  # unknown: assume it can collide
+    if not shape:
+        return 1
+    n = 1
+    for d in shape[:-1]:
+        n *= int(d)
+    return int(n)
+
+
+def classify_scatters(closed_jaxpr, context: str = "") -> List[Finding]:
+    """Classify every scatter in a ``ClosedJaxpr`` (recursing through
+    while/cond/scan/pjit/pallas_call bodies) into the table above."""
+    findings: List[Finding] = []
+    static_cache: dict = {}
+
+    def visit(eqn, enclosing):
+        name = eqn.primitive.name
+        if not name.startswith("scatter"):
+            return
+        site = site_of(eqn)
+        operand, indices, updates = eqn.invars[0], eqn.invars[1], eqn.invars[2]
+        try:
+            dtype = np.dtype(updates.aval.dtype)
+        except Exception:
+            dtype = np.dtype(np.int32)
+
+        if name in _COMMUTATIVE:
+            findings.append(Finding(
+                "RACE101", site,
+                f"{name} ({dtype}): order-independent reduction",
+                context))
+            return
+        if name in _ACCUMULATING:
+            if np.issubdtype(dtype, np.inexact):
+                findings.append(Finding(
+                    "RACE201", site,
+                    f"{name} on {dtype}: overlapping accumulation order is "
+                    "nondeterministic — results vary run to run",
+                    context))
+            else:
+                findings.append(Finding(
+                    "RACE202", site,
+                    f"{name} on {dtype}: overlapping accumulation is "
+                    "non-idempotent — a speculative replay double-counts",
+                    context))
+            return
+
+        # plain scatter (set): prove a benign class or demand an argument
+        key = id(enclosing)
+        if key not in static_cache:
+            static_cache[key] = static_vars(enclosing)
+        static = static_cache[key]
+        if is_static(indices, static):
+            findings.append(Finding(
+                "RACE102", site,
+                "store indices derive from constants/iota only "
+                "(slice assignment): overlap is impossible", context))
+            return
+        if _n_update_rows(indices) <= 1:
+            findings.append(Finding(
+                "RACE104", site,
+                "single update row: the store cannot self-collide",
+                context))
+            return
+        if is_constant_fill(updates, enclosing):
+            findings.append(Finding(
+                "RACE103", site,
+                f"idempotent constant store ({dtype}): colliding writes "
+                "all write the same value (scatter-or idiom)", context))
+            return
+        if bool(eqn.params.get("unique_indices", False)):
+            findings.append(Finding(
+                "RACE301", site,
+                "unique_indices=True asserted on data-driven indices "
+                f"({dtype}): XLA behavior is undefined if duplicates ever "
+                "appear — allowlist with the distinctness argument",
+                context))
+            return
+        findings.append(Finding(
+            "RACE300", site,
+            f"overlapping data-driven store ({dtype}): last writer wins, "
+            "nondeterministically — benign only if a conflict pass "
+            "detects and repairs collisions (paper Alg. 2 phase 2); "
+            "allowlist with that argument", context))
+
+    walk_eqns(closed_jaxpr.jaxpr, visit)
+    return findings

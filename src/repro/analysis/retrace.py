@@ -1,0 +1,246 @@
+"""Retrace-hazard lint: static jit args resolved at trace time, non-hashable
+statics, and plan-envelope leaks.
+
+Two complementary passes:
+
+**AST pass** (:func:`lint_source` / :func:`lint_package`) — finds every
+``jax.jit``-wrapped function with ``static_argnames``/``static_argnums``
+and checks each static parameter:
+
+* RETRACE001 — the parameter admits a ``None`` sentinel that the *body*
+  resolves (default ``None``, or an ``x is None`` test inside the jitted
+  body). This is exactly the PR-6 ``interpret=None`` cache-poisoning class:
+  the sentinel is the jit cache key, so the trace-time resolution freezes
+  into the cache and a later flip of the resolved global silently serves
+  the stale trace. The fix pattern is :func:`repro.kernels.ops.
+  resolve_interpret` — resolve OUTSIDE the jit boundary.
+* RETRACE002 — the parameter's default is a non-hashable literal
+  (list/dict/set): every call re-traces, or raises on cache lookup.
+
+**Trace pass** (:func:`check_trace_constants`) — inspects the concrete
+constants a traced program captured. A compiled :class:`ColoringPlan`
+promises zero retrace across the envelope, which requires every large
+array in the program to enter as an *argument* (part of the pytree) —
+a closure-captured concrete array instead bakes graph DATA into the
+program as a constant (RETRACE003): wrong answers for every later graph
+served through the plan, with no retrace to save you. Envelope-derived
+constants (iota ramps, constant fills) are exempt — they are functions of
+the static shape, identical for every served graph.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from .findings import Finding
+from .jaxpr_walk import collect_consts, rel_source_path
+
+# consts at or above this element count are checked against the
+# envelope-derived exemptions; smaller ones cannot hold per-edge data
+CONST_ELEMS_THRESHOLD = 128
+
+
+# --------------------------------------------------------------------------
+# AST pass
+# --------------------------------------------------------------------------
+def _is_jax_jit(node: ast.AST) -> bool:
+    """Matches ``jax.jit`` / ``jit`` callee nodes."""
+    if isinstance(node, ast.Attribute):
+        return (node.attr == "jit" and isinstance(node.value, ast.Name)
+                and node.value.id == "jax")
+    return isinstance(node, ast.Name) and node.id == "jit"
+
+
+def _static_names_from_call(call: ast.Call,
+                            fn: Optional[ast.FunctionDef]) -> List[str]:
+    """Static argnames declared by a ``jax.jit(...)``/``partial(jax.jit,...)``
+    call, resolving ``static_argnums`` positions against ``fn``'s params."""
+    names: List[str] = []
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            if isinstance(kw.value, ast.Constant) and isinstance(
+                    kw.value.value, str):
+                names.append(kw.value.value)
+            elif isinstance(kw.value, (ast.Tuple, ast.List)):
+                names.extend(e.value for e in kw.value.elts
+                             if isinstance(e, ast.Constant)
+                             and isinstance(e.value, str))
+        elif kw.arg == "static_argnums" and fn is not None:
+            pos = []
+            if isinstance(kw.value, ast.Constant) and isinstance(
+                    kw.value.value, int):
+                pos = [kw.value.value]
+            elif isinstance(kw.value, (ast.Tuple, ast.List)):
+                pos = [e.value for e in kw.value.elts
+                       if isinstance(e, ast.Constant)
+                       and isinstance(e.value, int)]
+            params = [a.arg for a in fn.args.args]
+            names.extend(params[p] for p in pos if p < len(params))
+    return names
+
+
+def _jit_static_names(fn: ast.FunctionDef) -> List[str]:
+    """Static argnames if ``fn`` is decorated with a jitting wrapper."""
+    for dec in fn.decorator_list:
+        if not isinstance(dec, ast.Call):
+            continue
+        callee = dec.func
+        # functools.partial(jax.jit, static_argnames=...)
+        is_partial = (isinstance(callee, ast.Attribute)
+                      and callee.attr == "partial") or (
+                          isinstance(callee, ast.Name)
+                          and callee.id == "partial")
+        if is_partial and dec.args and _is_jax_jit(dec.args[0]):
+            return _static_names_from_call(dec, fn)
+        # @jax.jit(static_argnames=...)
+        if _is_jax_jit(callee):
+            return _static_names_from_call(dec, fn)
+    return []
+
+
+def _defaults_of(fn: ast.FunctionDef) -> dict:
+    """param name -> default AST node (positional + kw-only)."""
+    out = {}
+    pos = fn.args.args
+    for arg, d in zip(pos[len(pos) - len(fn.args.defaults):],
+                      fn.args.defaults):
+        out[arg.arg] = d
+    for arg, d in zip(fn.args.kwonlyargs, fn.args.kw_defaults):
+        if d is not None:
+            out[arg.arg] = d
+    return out
+
+
+class _IsNoneFinder(ast.NodeVisitor):
+    """Collects names compared against None (``x is None`` either way)."""
+
+    def __init__(self):
+        self.names = set()
+
+    def visit_Compare(self, node: ast.Compare):
+        operands = [node.left] + list(node.comparators)
+        if any(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            has_none = any(isinstance(o, ast.Constant) and o.value is None
+                           for o in operands)
+            if has_none:
+                self.names.update(o.id for o in operands
+                                  if isinstance(o, ast.Name))
+        self.generic_visit(node)
+
+
+_MUTABLE_DEFAULTS = (ast.List, ast.Dict, ast.Set)
+
+
+def lint_source(source: str, filename: str,
+                context: str = "retrace-lint") -> List[Finding]:
+    """AST-lint one module's source for static-jit-arg hazards."""
+    findings: List[Finding] = []
+    try:
+        tree = ast.parse(source, filename=filename)
+    except SyntaxError as e:
+        findings.append(Finding(
+            "ANALYSIS000", f"{rel_source_path(filename)}:<module>",
+            f"could not parse: {e}", context))
+        return findings
+
+    # jitted via assignment: jf = jax.jit(f, static_argnames=...)
+    assigned: dict = {}  # target fn name -> static names
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _is_jax_jit(node.func):
+            if node.args and isinstance(node.args[0], ast.Name):
+                assigned.setdefault(node.args[0].id, []).extend(
+                    _static_names_from_call(node, None))
+
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        statics = _jit_static_names(node) + assigned.get(node.name, [])
+        if not statics:
+            continue
+        site = f"{rel_source_path(filename)}:{node.name}"
+        defaults = _defaults_of(node)
+        none_cmp = _IsNoneFinder()
+        for stmt in node.body:
+            none_cmp.visit(stmt)
+        for name in statics:
+            d = defaults.get(name)
+            if (isinstance(d, ast.Constant) and d.value is None) \
+                    or name in none_cmp.names:
+                how = ("defaults to None" if isinstance(d, ast.Constant)
+                       and d.value is None else "is tested `is None` in the "
+                       "jitted body")
+                findings.append(Finding(
+                    "RETRACE001", site,
+                    f"static jit arg {name!r} {how}: the sentinel is the "
+                    "cache key, so trace-time resolution freezes into the "
+                    "jit cache (resolve outside the jit boundary, like "
+                    "kernels.ops.resolve_interpret)", context))
+            if isinstance(d, _MUTABLE_DEFAULTS):
+                findings.append(Finding(
+                    "RETRACE002", site,
+                    f"static jit arg {name!r} has a non-hashable default "
+                    f"({type(d).__name__.lower()} literal)", context))
+    return findings
+
+
+def lint_package(root: str, context: str = "retrace-lint") -> List[Finding]:
+    """Lint every ``.py`` under ``root`` (a directory)."""
+    findings: List[Finding] = []
+    for dirpath, _dirnames, filenames in sorted(os.walk(root)):
+        for fname in sorted(filenames):
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            with open(path, "r", encoding="utf-8") as f:
+                findings.extend(lint_source(f.read(), path, context))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# trace pass
+# --------------------------------------------------------------------------
+def _is_affine_ramp(arr: np.ndarray) -> bool:
+    """iota/arange-like: 1-D with constant stride (stride 0 = constant)."""
+    if arr.ndim != 1 or arr.size < 2:
+        return True
+    if not np.issubdtype(arr.dtype, np.number):
+        return False
+    d = np.diff(arr.astype(np.float64))
+    return bool((d == d[0]).all())
+
+
+def _is_envelope_derived(arr: np.ndarray) -> bool:
+    """Constants a shape-specialized program may legitimately bake in:
+    constant fills and affine ramps (arange/iota and their reshapes) are
+    pure functions of the static envelope."""
+    if arr.size == 0:
+        return True
+    flat = arr.reshape(-1)
+    if not np.issubdtype(arr.dtype, np.number):
+        return bool((flat == flat[0]).all())
+    if (flat == flat[0]).all():
+        return True
+    return _is_affine_ramp(flat)
+
+
+def check_trace_constants(closed_jaxpr, context: str = "",
+                          site: str = "plan:program") -> List[Finding]:
+    """RETRACE003: large non-envelope-derived constants baked into a
+    trace (see module docstring)."""
+    findings: List[Finding] = []
+    for arr in collect_consts(closed_jaxpr):
+        if arr.size < CONST_ELEMS_THRESHOLD:
+            continue
+        if _is_envelope_derived(arr):
+            continue
+        findings.append(Finding(
+            "RETRACE003", site,
+            f"trace captured a concrete {arr.dtype}{list(arr.shape)} "
+            "constant that is neither a fill nor an iota ramp: a "
+            "closure-captured data array is frozen for every graph the "
+            "plan ever serves — pass it as a program argument instead",
+            context))
+    return findings

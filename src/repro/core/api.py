@@ -801,7 +801,8 @@ class ColoringPlan:
         ]
 
 
-def compile_plan(spec: ColoringSpec, graph_or_shape) -> ColoringPlan:
+def compile_plan(spec: ColoringSpec, graph_or_shape,
+                 verify: Optional[str] = None) -> ColoringPlan:
     """Compile ``spec`` against a graph (or an explicit :class:`PlanShape`)
     into a reusable :class:`ColoringPlan`.
 
@@ -809,8 +810,20 @@ def compile_plan(spec: ColoringSpec, graph_or_shape) -> ColoringPlan:
     vertex count exact, directed-edge capacity rounded up to the
     :func:`repro.core.graph.pad_bucket` grid, max-degree bound taken as-is.
     Any later graph matching the envelope is served with zero retrace; pass
-    a hand-built ``PlanShape`` to leave headroom for a whole family."""
-    return ColoringPlan(spec, graph_or_shape)
+    a hand-built ``PlanShape`` to leave headroom for a whole family.
+
+    ``verify`` runs the :mod:`repro.analysis` static analyzer over the
+    plan's program and envelope before returning (DESIGN.md §Analysis):
+    ``"warn"`` emits a Python warning for any finding not covered by the
+    committed baseline, ``"error"`` raises
+    :class:`repro.analysis.AnalysisError` instead. The analysis happens
+    after construction but before the first trace, so a hazardous spec is
+    reported (or refused) before any program runs."""
+    plan = ColoringPlan(spec, graph_or_shape)
+    if verify is not None:
+        from ..analysis import verify_plan  # deferred: analysis optional
+        verify_plan(plan.spec, plan.statics, mode=verify)
+    return plan
 
 
 # --------------------------------------------------------------------------

@@ -97,6 +97,15 @@ def _resolve_words(words: Optional[int], max_colors: int, name: str) -> int:
         raise ValueError(
             f"{name} engine needs a static color bound: build the graph "
             "via Graph.to_device() (it carries max_degree)")
+    from ..kernels.round_fused import COLOR_MASK  # deferred: core importable solo
+    if max_colors > COLOR_MASK:
+        # a color value at 2^28 IS round_fused's FORBID bit: a packed entry
+        # carrying it would forbid nothing and conflict with everything, so
+        # no table backend accepts a bound the packed layout cannot encode
+        raise ValueError(
+            f"{name} engine: max_colors={max_colors} exceeds the packed-"
+            f"entry color field (bits 0..27, max {COLOR_MASK}); "
+            "colors that large alias the FORBID/CONFLICT predicate bits")
     if words is not None:
         words = int(words)
         if words < num_color_words(max_colors):

@@ -3,9 +3,8 @@ coloring model: distance-1, distance-2, and bipartite partial distance-2."""
 from __future__ import annotations
 
 import numpy as np
-import jax.numpy as jnp
 
-from .graph import BipartiteGraph, Graph, DeviceGraph
+from .graph import BipartiteGraph, Graph
 
 
 def validate_coloring(graph: Graph, colors: np.ndarray) -> bool:
@@ -86,9 +85,3 @@ def count_pd2_conflicts(bg: BipartiteGraph, colors: np.ndarray,
     return count_conflicts(partial_square(bg, side), np.asarray(colors))
 
 
-def device_conflict_edges(g: DeviceGraph, colors: jnp.ndarray) -> jnp.ndarray:
-    """Boolean mask over the directed edge list: monochromatic, src>dst."""
-    cpad = jnp.concatenate([colors, jnp.array([0], colors.dtype)])
-    cs = cpad[g.src]
-    cd = cpad[g.dst]
-    return (cs == cd) & (cs > 0) & (g.src > g.dst)

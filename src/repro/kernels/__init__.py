@@ -19,15 +19,14 @@ Pallas interpret mode (``ops.INTERPRET``).
 from .firstfit import firstfit
 from .conflict import conflict_mask
 from .ref import firstfit_ref, conflict_mask_ref
-from .ops import (ell_mex, ell_gather_colors, count_conflicts_kernel,
-                  INTERPRET, resolve_interpret)
+from .ops import ell_mex, ell_gather_colors, INTERPRET, resolve_interpret
 from .round_fused import (round_fused, round_fused_ref, pack_entries,
                           tile_conflict_counts, COLOR_MASK, FORBID_BIT,
                           CONFLICT_BIT)
 
 __all__ = [
     "firstfit", "conflict_mask", "firstfit_ref", "conflict_mask_ref",
-    "ell_mex", "ell_gather_colors", "count_conflicts_kernel", "INTERPRET",
+    "ell_mex", "ell_gather_colors", "INTERPRET",
     "resolve_interpret", "round_fused", "round_fused_ref", "pack_entries",
     "tile_conflict_counts", "COLOR_MASK", "FORBID_BIT", "CONFLICT_BIT",
 ]

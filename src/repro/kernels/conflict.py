@@ -26,6 +26,13 @@ def _conflict_kernel(csrc_ref, cdst_ref, src_ref, dst_ref, out_ref):
     out_ref[...] = conf.astype(jnp.int32)
 
 
+def vmem_estimate(*, block_e: int = 1024) -> int:
+    """Per-grid-step VMEM footprint (bytes) of :func:`conflict_mask` for
+    the analyzer's budget checker: four int32 input blocks, one output
+    block, and the boolean compare intermediate."""
+    return 4 * block_e * 5 + block_e
+
+
 @functools.partial(jax.jit, static_argnames=("block_e", "interpret"))
 def conflict_mask(
     colors_src: jnp.ndarray,

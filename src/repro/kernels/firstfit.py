@@ -77,6 +77,21 @@ def _firstfit_kernel(nbr_ref, out_ref, forb_ref, *, words: int, bd: int):
         out_ref[...] = jnp.min(cand.reshape(cand.shape[0], -1), axis=1)
 
 
+def vmem_estimate(*, words: int = 16, block_v: int = 512,
+                  block_d: int = 128) -> int:
+    """Per-grid-step VMEM footprint (bytes) of :func:`firstfit`'s launch
+    geometry, for the analyzer's budget checker (repro.analysis.budgets):
+    input + output blocks, the ``[BV, W]`` scratch bitset, and the larger
+    of the two big intermediates — the ``[BV, BD, W]`` per-word contribution
+    tensor and the ``[BV, W, 32]`` bit-lane expansion. ``words`` scales
+    with the color bound (W = ceil(C/32) ~ max_degree/32), which is how a
+    high-degree plan breaches the budget at default block shapes."""
+    blocks = 4 * block_v * (block_d + 1)
+    scratch = 4 * block_v * words
+    intermediate = 4 * block_v * words * max(block_d, 32)
+    return blocks + scratch + intermediate
+
+
 @functools.partial(
     jax.jit, static_argnames=("words", "block_v", "block_d", "interpret")
 )

@@ -32,6 +32,12 @@ def resolve_interpret(interpret: bool | None = None) -> bool:
     fallback read inside a jitted body is frozen at first trace — the cache
     key stays ``None`` and a later flip of ``ops.INTERPRET`` (tests, TPU
     attach) silently keeps serving the stale trace.
+
+    This is exactly the hazard class the static analyzer lints for as
+    RETRACE001 (:mod:`repro.analysis.retrace`): a static jit arg that
+    defaults to ``None`` or is tested ``is None`` inside the jitted body.
+    The CI lint lane keeps the package free of new instances; this function
+    is the sanctioned fix pattern.
     """
     return INTERPRET if interpret is None else bool(interpret)
 
@@ -61,21 +67,3 @@ def ell_mex(colors: jnp.ndarray, ell: jnp.ndarray, *, words: int = 16,
                     interpret=resolve_interpret(interpret))
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _count_conflicts_kernel(colors: jnp.ndarray, src: jnp.ndarray,
-                            dst: jnp.ndarray, *, interpret: bool
-                            ) -> jnp.ndarray:
-    cpad = jnp.concatenate([colors, jnp.zeros((1,), jnp.int32)])
-    v = colors.shape[0]
-    cs = cpad[jnp.minimum(src, v)]
-    cd = cpad[jnp.minimum(dst, v)]
-    mask = conflict_mask(cs, cd, src, dst, interpret=interpret)
-    return mask.sum(dtype=jnp.int32)
-
-
-def count_conflicts_kernel(colors: jnp.ndarray, src: jnp.ndarray,
-                           dst: jnp.ndarray, *, interpret: bool | None = None
-                           ) -> jnp.ndarray:
-    """Total conflicted edges via the Pallas conflict kernel."""
-    return _count_conflicts_kernel(colors, src, dst,
-                                   interpret=resolve_interpret(interpret))

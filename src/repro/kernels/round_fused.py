@@ -131,6 +131,20 @@ def _round_fused_kernel(ent_ref, own_ref, mex_ref, conf_ref, forb_ref,
         conf_ref[...] = hit_ref[...]
 
 
+def vmem_estimate(*, words: int = 16, block_v: int = 512,
+                  block_d: int = 128) -> int:
+    """Per-grid-step VMEM footprint (bytes) of :func:`round_fused`'s launch
+    geometry, for the analyzer's budget checker (repro.analysis.budgets):
+    the packed-entry + own-color input blocks, the mex/conflict output
+    blocks, the ``[BV, W]`` bitset and ``[BV]`` hit scratch, and the larger
+    of the ``[BV, BD, W]`` contribution tensor and the ``[BV, W, 32]``
+    bit-lane expansion (same idiom as ``firstfit.vmem_estimate``)."""
+    blocks = 4 * block_v * (block_d + 3)
+    scratch = 4 * block_v * (words + 1)
+    intermediate = 4 * block_v * words * max(block_d, 32)
+    return blocks + scratch + intermediate
+
+
 @functools.partial(
     jax.jit, static_argnames=("words", "block_v", "block_d", "interpret")
 )

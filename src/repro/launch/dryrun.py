@@ -40,7 +40,7 @@ from repro.parallel.sharding import (DEFAULT_RULES, activation_rules,
                                      rules_for_mesh)
 from repro.train import AdamWConfig, make_train_step
 from repro.train.train_step import TrainStepConfig
-from repro.train.optimizer import abstract_opt_state, opt_state_axes
+from repro.train.optimizer import abstract_opt_state
 
 # ---- hardware model (TPU v5e-like; per chip)
 PEAK_FLOPS = 197e12          # bf16

@@ -304,14 +304,3 @@ def analyze_hlo(hlo: str, entry_hint: str = "main") -> HloStats:
         collective_counts=coll_counts,
         while_trip_counts=trips,
     )
-
-
-# Back-compat shim used by earlier callers
-def collective_stats(hlo: str, entry_hint: str = "main"):
-    st = analyze_hlo(hlo, entry_hint)
-
-    class _C:
-        bytes_by_kind = st.collective_bytes_by_kind
-        count_by_kind = st.collective_counts
-        total_bytes = st.collective_bytes
-    return _C()

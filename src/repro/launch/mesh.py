@@ -17,11 +17,3 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
-
-
-def make_host_mesh(shape=None, axes=("data", "model")):
-    """Small mesh over whatever devices exist (tests/examples)."""
-    n = len(jax.devices())
-    if shape is None:
-        shape = (n, 1) if len(axes) == 2 else (n,)
-    return jax.make_mesh(shape, axes)

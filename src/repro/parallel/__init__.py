@@ -1,10 +1,10 @@
 from .sharding import (
-    Rules, DEFAULT_RULES, logical_to_spec, params_shardings, constrain,
+    Rules, DEFAULT_RULES, logical_to_spec, constrain,
     activation_rules, current_rules, rules_for_mesh, spec_for_array,
 )
 
 __all__ = [
-    "Rules", "DEFAULT_RULES", "logical_to_spec", "params_shardings",
+    "Rules", "DEFAULT_RULES", "logical_to_spec",
     "constrain", "activation_rules", "current_rules", "rules_for_mesh",
     "spec_for_array",
 ]

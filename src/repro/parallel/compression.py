@@ -9,6 +9,9 @@ keeps the estimator unbiased. ~4x less collective traffic than fp32 psum
 Use via ``compressed_psum_tree`` inside a shard_map'd explicit-DP step, or
 standalone (tests compare against exact psum).
 """
+# pending: dist_scale wire-up — exports stay dormant until the distributed
+# train step grows a compressed-sync knob (repro.analysis.deadcode exempts
+# this module's unreferenced exports via this pragma)
 from __future__ import annotations
 
 import jax

@@ -136,18 +136,6 @@ def spec_for_array(shape: Tuple[int, ...], logical_axes, rules: Rules,
     return P(*_dedup(tuple(resolved)))
 
 
-def params_shardings(param_shapes, param_axes, rules: Rules, mesh: Mesh):
-    """NamedSharding tree for a params tree (shapes tree + axes tree)."""
-    from ..models.params import is_axes_leaf
-
-    def one(shape_leaf, axes_leaf):
-        spec = spec_for_array(tuple(shape_leaf.shape), axes_leaf, rules, mesh)
-        return NamedSharding(mesh, spec)
-
-    return jax.tree.map(one, param_shapes, param_axes,
-                        is_leaf=lambda x: is_axes_leaf(x) or hasattr(x, "shape"))
-
-
 # ---------------------------------------------------------------- context
 _ctx = threading.local()
 

@@ -53,11 +53,6 @@ def abstract_opt_state(param_shapes, cfg: AdamWConfig):
     }
 
 
-def opt_state_axes(param_axes):
-    """Logical-axes tree matching init_opt_state (moments shard like params)."""
-    return {"m": param_axes, "v": param_axes, "step": ()}
-
-
 def schedule(cfg: AdamWConfig, step):
     step = step.astype(jnp.float32)
     warm = jnp.minimum(1.0, (step + 1.0) / max(1, cfg.warmup_steps))

@@ -136,7 +136,7 @@ def test_sharded_train_step_2x2():
         from repro import models
         from repro.train import AdamWConfig, init_opt_state, make_train_step
         from repro.parallel.sharding import (DEFAULT_RULES, rules_for_mesh,
-                                             activation_rules, params_shardings)
+                                             activation_rules)
         from repro.launch import specs as S
 
         cfg = get_smoke_config("qwen3-4b")

@@ -1,0 +1,30 @@
+"""CI lint lane: run the repro.analysis static analyzer and fail on drift.
+
+Thin wrapper over ``python -m repro.analysis`` (the full registry sweep
+plus the source-level passes) so CI has one entry point with the policy
+spelled out:
+
+* a gating finding (warning/error) with no ``baseline.json`` entry fails —
+  fix the code, or allowlist the fingerprint WITH a reason string;
+* a baseline entry no current finding matches also fails (stale drift:
+  a risk-acceptance for code that no longer exists must not linger);
+* info findings never gate.
+
+Run locally before pushing::
+
+  PYTHONPATH=src python tools/lint_plans.py [-v]
+
+Extra arguments pass straight through to the analyzer CLI
+(``--strategies``, ``--vmem-ceiling``, ``--json``, ...). The CI lane runs
+this under ``-W error::DeprecationWarning`` so the analyzer itself — which
+traces every registry program — also proves the coloring stack deprecation
+-clean end to end.
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.analysis.__main__ import main
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
