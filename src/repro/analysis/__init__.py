@@ -117,12 +117,25 @@ def trace_plan_program(spec, statics):
         max_colors = int(statics.max_degree) + 1
         if spec.color_bound > 0:
             max_colors = min(max_colors, int(spec.color_bound))
+        use_boundary = spec.wire != "full"
+        # trace the boundary program with a non-empty halo slab even when
+        # the envelope carries none (the sweep mesh is 1 device, where Bl
+        # is always 0): the wire code is shape-generic, and the classifier
+        # must see the scatters a real multi-device plan compiles. Floor 2,
+        # not 1 — a width-1 slab is a single update row, which the race
+        # classifier would (correctly for THAT shape, wrongly for the
+        # fleet's) discharge as unable to self-collide
+        bcap = max(2, min(Vl, int(statics.boundary_cap))) if use_boundary \
+            else 1
         fn = strategy._build(spec, mesh, verts_local=Vl, edges_local=slab,
                              max_colors=max_colors,
-                             ell_width=int(statics.max_degree))
+                             ell_width=int(statics.max_degree),
+                             wire=("boundary" if use_boundary else "full"),
+                             wire_colors=int(statics.max_degree) + 1)
         shaped = sds((D, slab), jnp.int32)
+        bshaped = sds((D, bcap), jnp.int32)
         with set_mesh(mesh):
-            return jax.make_jaxpr(fn)(shaped, shaped)
+            return jax.make_jaxpr(fn)(shaped, shaped, bshaped)
 
     prog = strategy.device_program(spec, backend)
     dg = _abstract_device_graph(statics, needs_ell=backend.needs_ell)

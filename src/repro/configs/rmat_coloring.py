@@ -46,6 +46,17 @@ class ColoringConfig:
     # the per-device slab shape, so the lowered program stays static.
     frontier: str = "auto"
     frontier_capacity: int = 0
+    # distributed per-round exchange (repro.core.distributed): "auto"/
+    # "boundary" exchange only the bit-packed boundary payload (the
+    # default three-tier wire), "full" the legacy [Vp] gather. The dry-run
+    # lowers the boundary program with a conservative halo slab (Bl = Vl:
+    # every vertex boundary — shapes only, no host graph to classify with).
+    wire: str = "auto"
+    # vertex ownership: "1d" contiguous blocks, "2d" block-cyclic over a
+    # device grid — spreads R-MAT hub regions so one shard doesn't carry
+    # both the widest edge slab and the densest boundary. Shape-invariant
+    # at dry-run time (ownership only permutes ids).
+    partition: str = "1d"
 
     def to_dynamic_spec(self):
         """This config as the streaming-lane :class:`ColoringSpec`: the
@@ -85,7 +96,8 @@ class ColoringConfig:
                             local_concurrency=self.local_concurrency,
                             color_bound=self.color_bound, mesh=mesh,
                             frontier=self.frontier,
-                            frontier_capacity=self.frontier_capacity)
+                            frontier_capacity=self.frontier_capacity,
+                            wire=self.wire, partition=self.partition)
 
 
 def get_config() -> ColoringConfig:

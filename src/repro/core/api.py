@@ -50,12 +50,14 @@ import jax
 import jax.numpy as jnp
 
 from .distance2 import MODELS, as_constraint_graph, constraint_host_graph
+from .distributed import PARTITION_SCHEMES
 from .engine import EngineSpec, MexBackend, get_backend
 from .frontier import FRONTIER_MODES, frontier_capacities, resolve_frontier
 from .graph import BipartiteGraph, DeviceGraph, Graph, pad_bucket
 from .ordering import ORDERINGS
 
 _LOWERINGS = ("auto", "wedge", "square")
+WIRE_MODES = ("auto", "boundary", "full")
 
 
 # --------------------------------------------------------------------------
@@ -92,7 +94,16 @@ class ColoringSpec:
                  results either way — the frontier is an execution bypass,
                  never a semantics change;
     frontier_capacity  static vertex-slab capacity override (0 = the
-                 |V|/32 bucket ladder; the edge slab scales with it).
+                 |V|/32 bucket ladder; the edge slab scales with it);
+    wire         the distributed per-round exchange: ``"auto"`` (boundary
+                 wire; a plan whose served graph overflows the pinned halo
+                 capacity spills to a lazily-compiled full-gather program),
+                 ``"boundary"`` (require the boundary wire — halo overflow
+                 raises), ``"full"`` (the legacy ``[Vp]`` gather, kept as
+                 the parity oracle). All three are bit-identical;
+    partition    distributed vertex ownership: ``"1d"`` contiguous blocks
+                 or ``"2d"`` block-cyclic over a device grid (spreads
+                 R-MAT hub regions — repro.core.distributed).
     """
 
     strategy: Union[str, "ColoringStrategy"] = "iterative"
@@ -111,6 +122,8 @@ class ColoringSpec:
     local_concurrency: int = 1
     frontier: str = "auto"
     frontier_capacity: int = 0
+    wire: str = "auto"
+    partition: str = "1d"
 
     def __post_init__(self):
         if self.model not in MODELS:
@@ -122,6 +135,12 @@ class ColoringSpec:
         if self.frontier not in FRONTIER_MODES:
             raise ValueError(f"unknown frontier mode {self.frontier!r}; "
                              f"choose from {FRONTIER_MODES}")
+        if self.wire not in WIRE_MODES:
+            raise ValueError(f"unknown wire mode {self.wire!r}; "
+                             f"choose from {WIRE_MODES}")
+        if self.partition not in PARTITION_SCHEMES:
+            raise ValueError(f"unknown partition scheme {self.partition!r}; "
+                             f"choose from {PARTITION_SCHEMES}")
 
     def resolve(self) -> Tuple["ColoringStrategy", MexBackend]:
         """Resolve the registered pieces (strategy, mex backend) by name."""
@@ -476,7 +495,8 @@ class DistributedStrategy(ColoringStrategy):
         return Mesh(np.asarray(jax.devices()[:1]), ("x",))
 
     def _build(self, spec: ColoringSpec, mesh, *, verts_local: int,
-               edges_local: int, max_colors: int, ell_width: int):
+               edges_local: int, max_colors: int, ell_width: int,
+               wire: str = "boundary", wire_colors: int = 0):
         from .distributed import build_distributed_coloring
         fcv = fce = 0
         if spec.frontier != "off":
@@ -491,7 +511,8 @@ class DistributedStrategy(ColoringStrategy):
             max_rounds=int(spec.max_rounds),
             max_sweeps=int(spec.max_sweeps),
             engine=spec.engine, max_colors=max_colors, ell_width=ell_width,
-            frontier_cap_v=fcv, frontier_cap_e=fce)
+            frontier_cap_v=fcv, frontier_cap_e=fce,
+            wire=wire, wire_colors=wire_colors)
 
     def _raw(self, spec: ColoringSpec, num_vertices: int, colors, rounds,
              conf, sweeps, fronts) -> RawColoring:
@@ -509,15 +530,21 @@ class DistributedStrategy(ColoringStrategy):
         host = constraint_host_graph(g, spec.model, side=spec.side)
         mesh = self._mesh(spec)
         D = int(np.prod(mesh.devices.shape))
-        lsrc, ldst, Vl = partition_graph(host, D)
+        layout = partition_graph(host, D, scheme=spec.partition)
         max_colors = host.max_degree() + 1
         if spec.color_bound > 0:
             max_colors = min(max_colors, int(spec.color_bound))
-        fn = self._build(spec, mesh, verts_local=Vl, edges_local=lsrc.shape[1],
-                         max_colors=max_colors, ell_width=host.max_degree())
+        # one-shot slabs fit the graph exactly, so "auto" never spills
+        wire = "full" if spec.wire == "full" else "boundary"
+        fn = self._build(spec, mesh, verts_local=layout.verts_local,
+                         edges_local=layout.edges_local,
+                         max_colors=max_colors, ell_width=host.max_degree(),
+                         wire=wire, wire_colors=host.max_degree() + 1)
         with set_mesh(mesh):
-            colors, rounds, conf, sweeps, fronts = fn(jnp.asarray(lsrc),
-                                                      jnp.asarray(ldst))
+            colors, rounds, conf, sweeps, fronts = fn(
+                jnp.asarray(layout.lsrc), jnp.asarray(layout.ldst),
+                jnp.asarray(layout.bnd))
+        colors = layout.unpermute(np.asarray(colors).reshape(-1))
         return self._raw(spec, host.num_vertices, colors, rounds, conf,
                          sweeps, fronts)
 
@@ -534,20 +561,65 @@ class DistributedStrategy(ColoringStrategy):
         max_colors = statics.max_degree + 1
         if spec.color_bound > 0:
             max_colors = min(max_colors, int(spec.color_bound))
+        use_boundary = spec.wire != "full"
+        # halo capacity the boundary program pins; _plan_shape derived it
+        # from the compile graph (with headroom). wire_colors is the
+        # UNCAPPED Delta+1: packed entries must hold any color the solve
+        # can assign, and color_bound caps only the forbid tables
+        bcap = int(statics.boundary_cap) if use_boundary else 0
         fn = self._build(spec, mesh, verts_local=Vl, edges_local=slab,
-                         max_colors=max_colors, ell_width=statics.max_degree)
+                         max_colors=max_colors, ell_width=statics.max_degree,
+                         wire=("boundary" if use_boundary else "full"),
+                         wire_colors=statics.max_degree + 1)
 
-        def counted(lsrc, ldst):
+        def counted(lsrc, ldst, bnd):
             trace_hook()
-            return fn(lsrc, ldst)
+            return fn(lsrc, ldst, bnd)
 
         jfn = jax.jit(counted)
+        spill: Dict[str, Callable] = {}
+
+        def spill_fn():
+            # wire="auto" halo overflow: a lazily-compiled full-gather
+            # program (one extra counted trace, ever). Its bnd operand is
+            # an ignored [D, 1] dummy so the spill shape is call-invariant.
+            if "fn" not in spill:
+                f = self._build(spec, mesh, verts_local=Vl, edges_local=slab,
+                                max_colors=max_colors,
+                                ell_width=statics.max_degree, wire="full",
+                                wire_colors=statics.max_degree + 1)
+
+                def counted_full(lsrc, ldst, bnd):
+                    trace_hook()
+                    return f(lsrc, ldst, bnd)
+
+                spill["fn"] = jax.jit(counted_full)
+            return spill["fn"]
 
         def executor(host: Graph) -> RawColoring:
-            lsrc, ldst, _ = partition_graph(host, D, pad_edges_to=slab)
+            layout = partition_graph(host, D, pad_edges_to=slab,
+                                     scheme=spec.partition)
+            if not use_boundary:
+                # the full wire never reads bnd; a fixed dummy keeps the
+                # jit signature constant across served graphs
+                run = jfn
+                bnd = np.full((D, 1), layout.verts_local, np.int32)
+            elif layout.boundary_local <= bcap:
+                run, bnd = jfn, layout.padded_boundary(bcap)
+            elif spec.wire == "boundary":
+                raise ValueError(
+                    f"graph has {layout.boundary_local} boundary vertices "
+                    f"on its densest shard, above the plan halo capacity "
+                    f"{bcap}; compile a plan from this graph, or use "
+                    "wire='auto' to spill to the full-gather wire")
+            else:
+                run = spill_fn()
+                bnd = np.full((D, 1), layout.verts_local, np.int32)
             with set_mesh(mesh):
-                colors, rounds, conf, sweeps, fronts = jfn(jnp.asarray(lsrc),
-                                                           jnp.asarray(ldst))
+                colors, rounds, conf, sweeps, fronts = run(
+                    jnp.asarray(layout.lsrc), jnp.asarray(layout.ldst),
+                    jnp.asarray(bnd))
+            colors = layout.unpermute(np.asarray(colors).reshape(-1))
             return self._raw(spec, statics.num_vertices, colors, rounds,
                              conf, sweeps, fronts)
 
@@ -647,12 +719,20 @@ class PlanShape:
                    shapes pass through :func:`repro.core.graph.pad_bucket`);
     max_degree     constraint max-degree bound: sizes the table backends'
                    color capacity and the ELL slab width. Graphs above it
-                   are rejected (a too-small table silently drops forbids).
+                   are rejected (a too-small table silently drops forbids);
+    boundary_cap   distributed halo capacity: the per-shard boundary slab
+                   width the plan's boundary wire pins (``_plan_shape``
+                   derives it, with headroom, by partitioning the compile
+                   graph). 0 = no halo slab — correct for device-strategy
+                   plans and 1-device meshes; a served graph overflowing
+                   the cap spills to the full wire (``wire="auto"``) or is
+                   rejected (``wire="boundary"``).
     """
 
     num_vertices: int
     padded_edges: int
     max_degree: int
+    boundary_cap: int = 0
 
 
 def _plan_shape(spec: ColoringSpec, graph_or_shape) -> PlanShape:
@@ -663,9 +743,24 @@ def _plan_shape(spec: ColoringSpec, graph_or_shape) -> PlanShape:
             "compile_plan needs a host Graph/BipartiteGraph (plans relabel "
             "and pad on host) or an explicit PlanShape")
     host = constraint_host_graph(graph_or_shape, spec.model, side=spec.side)
+    boundary_cap = 0
+    if get_strategy(spec.strategy).wants == "host" and spec.wire != "full":
+        # halo envelope for the boundary wire: partition the compile graph
+        # and give the densest shard's boundary count the same skew
+        # headroom as the edge slab, capped at Vl (every vertex boundary)
+        from .distributed import partition_graph
+        mesh = DistributedStrategy._mesh(spec)
+        D = int(np.prod(mesh.devices.shape))
+        if D > 1:
+            Bl = partition_graph(host, D,
+                                 scheme=spec.partition).boundary_local
+            if Bl:
+                Vl = -(-host.num_vertices // D)
+                boundary_cap = min(Vl, pad_bucket(int(Bl * 1.35)))
     return PlanShape(num_vertices=host.num_vertices,
                      padded_edges=pad_bucket(host.num_directed_edges),
-                     max_degree=host.max_degree())
+                     max_degree=host.max_degree(),
+                     boundary_cap=boundary_cap)
 
 
 class ColoringPlan:

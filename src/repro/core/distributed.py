@@ -1,28 +1,47 @@
 """Distributed BSP coloring via shard_map — the Bozdag et al. [6] framework
 (the paper's ITERATIVE ancestor) mapped onto a JAX device mesh.
 
-Vertices are block-partitioned across all mesh devices. Each BSP round:
+Vertices are partitioned across all mesh devices (:func:`partition_graph`:
+1D blocks, or 2D block-cyclic for skewed R-MAT degree distributions), and
+every local vertex is classified at partition time as **interior** (no
+cross-shard edge — its color never leaves the shard) or **boundary**. Each
+BSP round:
 
-  1. ``all_gather`` committed colors (pending masked 0) — the boundary-color
-     exchange of the distributed framework, fused into one collective;
-  2. local speculative greedy over the device's pending vertices. With local
-     concurrency ``C=1`` (default) each device colors its pending set
-     *sequentially* — exactly the distributed-memory algorithm — realized as
-     the chaotic fixpoint of the local offset-precedence dataflow equations
-     via the shared :func:`repro.core.engine.fixpoint_sweep` (converges in
-     local-DAG-depth sweeps, no communication inside); cross-device pending
-     neighbors are speculated against (not forbidden). The first-fit inner
-     loop is the pluggable mex backend (``engine=``), bound to the local
-     vertex slab;
-  3. ``all_gather`` of committed colors + pending flags;
-  4. conflict detection: monochromatic same-round pairs — with C=1 these are
-     exclusively *boundary* (cross-device) conflicts, as in [6]; the higher
-     global index recolors;
-  5. ``psum`` termination vote.
+  1. local speculative greedy over the device's pending vertices, against
+     last round's exchanged snapshot. With local concurrency ``C=1``
+     (default) each device colors its pending set *sequentially* — exactly
+     the distributed-memory algorithm — realized as the chaotic fixpoint of
+     the local offset-precedence dataflow equations via the shared
+     :func:`repro.core.engine.fixpoint_sweep` (converges in local-DAG-depth
+     sweeps, no communication inside); cross-device pending neighbors are
+     speculated against (not forbidden). The first-fit inner loop is the
+     pluggable mex backend (``engine=``), bound to the local vertex slab;
+  2. the wire — a three-tier exchange of ``(color, pending)`` state, each
+     tier bit-identical to the others (DESIGN.md §Distributed):
+
+     * **boundary wire** (the default): only *boundary* colors + pending
+       flags cross the wire, bit-packed into int32 words
+       (:mod:`repro.parallel.compression`) and scattered through the static
+       boundary->halo index map; the shard's own ``[Vl]`` snapshot slice is
+       patched locally with no collective at all. Exact because every
+       cross-shard read (phase-1 forbids and the conflict pass) targets
+       either a local vertex or a remote *boundary* vertex — by definition;
+     * **frontier-halo wire** (H-C3, layered on top): when a psum vote says
+       every device's pending set fits its frontier slab, the exchange
+       shrinks further, to the ``(gid, color)`` pairs of the per-device
+       frontier slabs;
+     * **full gather** (the spill path, ``wire="full"``): the legacy H-C1
+       ``[Vp]`` packed-int16 gather — retained for plan envelopes whose
+       halo capacity a served graph overflows, and as the parity oracle;
+  3. conflict detection against the exchanged view: monochromatic
+     same-round pairs — with C=1 these are exclusively *boundary*
+     (cross-device) conflicts, as in [6]; the higher global index recolors;
+  4. ``psum`` termination vote.
 
 The whole multi-round algorithm is one ``lax.while_loop`` inside shard_map,
 so it lowers/compiles as a single XLA program on the production meshes —
-`launch/dryrun.py` exercises it via the rmat_coloring config.
+`launch/dryrun.py` exercises it via the rmat_coloring config, and the
+``dist_scale`` benchmark family measures bytes-on-wire vs. shard count.
 """
 from __future__ import annotations
 
@@ -37,34 +56,81 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ..jax_compat import pvary, shard_map
+from ..parallel.compression import halo_words, pack_halo, unpack_halo
 
 from .engine import (EngineSpec, SweepSpec, edge_slots, fixpoint_sweep,
                      get_backend, lockstep_offsets)
 from .frontier import (FrontierSlab, compact_frontier, frontier_counts,
                        frontier_sweep)
-from .graph import Graph
+from .graph import Graph, ShardLayout
+
+PARTITION_SCHEMES = ("1d", "2d")
+WIRES = ("boundary", "full")
+
+
+def _grid_shape(num_devices: int):
+    """The ``Pr x Pc`` device grid of the 2D block-cyclic scheme: ``Pr`` the
+    largest divisor of D at most ``sqrt(D)`` (a prime D degenerates to a
+    1 x D grid, i.e. plain cyclic distribution)."""
+    Pr = max(1, int(np.sqrt(num_devices)))
+    while num_devices % Pr:
+        Pr -= 1
+    return Pr, num_devices // Pr
 
 
 def partition_graph(graph: Graph, num_devices: int,
-                    pad_edges_to: int = 0):
-    """Host-side partitioning into per-device fixed-shape edge slabs.
+                    pad_edges_to: int = 0, *, scheme: str = "1d",
+                    pad_boundary_to: int = 0) -> ShardLayout:
+    """Host-side partitioning into the shard-local CSR + halo layout
+    (:class:`repro.core.graph.ShardLayout`).
 
-    Returns (lsrc [D, El], ldst [D, El], verts_per_device). Device d owns
-    global vertices [d*Vl, (d+1)*Vl); lsrc holds *local* ids (pad = Vl),
-    ldst holds *global* ids (pad = Vl*D). Edges stay row-contiguous per
-    device (global src order), so local ELL slots are recoverable on device
-    via :func:`repro.core.engine.edge_slots`.
+    Device d owns partition-space vertices [d*Vl, (d+1)*Vl); ``lsrc`` holds
+    *local* ids (pad = Vl), ``ldst`` *global* ids (pad = Vl*D). Edges stay
+    row-contiguous per device (src order), so local ELL slots are
+    recoverable on device via :func:`repro.core.engine.edge_slots`.
 
-    ``pad_edges_to`` pins the slab width El to a fixed capacity (the
-    :class:`repro.core.api.ColoringPlan` path, where every served graph
-    must produce identically-shaped slabs); a graph whose densest partition
-    exceeds it is rejected rather than truncated.
+    Every local vertex is classified: **boundary** iff it has any
+    cross-shard edge (as src or dst — symmetric directed edge lists make
+    these the same set), else **interior**. ``layout.bnd [D, Bl]`` is the
+    static boundary->halo index map the boundary-only wire exchanges
+    through; interior vertices never appear in it, nor in any other shard's
+    ``ldst``, so their colors structurally cannot leave the shard.
+
+    ``scheme`` picks vertex ownership: ``"1d"`` contiguous blocks of the
+    original ids, or ``"2d"`` block-cyclic over a ``Pr x Pc`` device grid
+    (ScaLAPACK-style: ``owner(v) = (v mod Pr)*Pc + (v div Pr) mod Pc``,
+    local index ``v div D``). R-MAT generators concentrate high-degree
+    vertices at low ids, so 1D blocks hand one shard both the widest edge
+    slab and the densest boundary; the 2D map spreads each hub region
+    across the whole grid, re-balancing El and Bl (the ``dist_scale``
+    benchmark family measures both). A ``"2d"`` layout carries the
+    original->partition ``perm``; colors come back through
+    :meth:`ShardLayout.unpermute`. (This is vertex-grid distribution, not
+    Bogle-Slota 2D *edge* partitioning — the local solve keeps every edge
+    on its src's owner, so no row/column sub-collectives are needed.)
+
+    ``pad_edges_to`` / ``pad_boundary_to`` pin the slab widths El / Bl to
+    fixed capacities (the :class:`repro.core.api.ColoringPlan` path, where
+    every served graph must produce identically-shaped slabs); a graph
+    whose densest shard exceeds either is rejected rather than truncated.
     """
+    if scheme not in PARTITION_SCHEMES:
+        raise ValueError(f"unknown partition scheme {scheme!r}; choose "
+                         f"from {PARTITION_SCHEMES}")
     D = num_devices
     V = graph.num_vertices
     Vl = -(-V // D)
     Vp = Vl * D
     src, dst = graph.directed_edges()  # src sorted
+    perm = None
+    if scheme == "2d":
+        Pr, Pc = _grid_shape(D)
+        ids = np.arange(V, dtype=np.int64)
+        owner_of = (ids % Pr) * Pc + (ids // Pr) % Pc
+        perm = (owner_of * Vl + ids // D).astype(np.int32)
+        src, dst = perm[src], perm[dst]
+        order = np.lexsort((dst, src))
+        src, dst = src[order], dst[order]
     owner = src // Vl
     counts = np.bincount(owner, minlength=D)
     El = max(1, int(counts.max()))
@@ -83,31 +149,69 @@ def partition_graph(graph: Graph, num_devices: int,
         k = offsets[d + 1] - offsets[d]
         lsrc[d, :k] = src[sl] - d * Vl
         ldst[d, :k] = dst[sl]
-    return lsrc, ldst, Vl
+    # interior/boundary split: every endpoint of a cross-shard edge is
+    # boundary. Marking dst as well as src keeps the classification exact
+    # (= "some remote shard reads this vertex") even for an asymmetric
+    # directed edge list; for the symmetric lists Graph produces the two
+    # marks coincide.
+    cross = owner != (dst // Vl)
+    bmask = np.zeros(Vp, np.bool_)
+    bmask[src[cross]] = True
+    bmask[dst[cross]] = True
+    bids = np.flatnonzero(bmask)
+    bowner = bids // Vl
+    bcounts = np.bincount(bowner, minlength=D)
+    Bl = int(bcounts.max()) if bids.size else 0
+    if pad_boundary_to:
+        if Bl > pad_boundary_to:
+            raise ValueError(
+                f"densest shard holds {Bl} boundary vertices, above the "
+                f"requested halo capacity pad_boundary_to={pad_boundary_to}")
+        Bl = int(pad_boundary_to)
+    bnd = np.full((D, Bl), Vl, np.int32)
+    boffsets = np.zeros(D + 1, np.int64)
+    np.cumsum(bcounts, out=boffsets[1:])
+    rank = np.arange(bids.size, dtype=np.int64) - boffsets[bowner]
+    bnd[bowner, rank] = (bids - bowner * Vl).astype(np.int32)
+    return ShardLayout(lsrc=lsrc, ldst=ldst, bnd=bnd, verts_local=Vl,
+                       num_vertices=V, num_devices=D, scheme=scheme,
+                       perm=perm, boundary_counts=bcounts.astype(np.int64))
 
 
-def _bsp_local(lsrc, ldst, *, axis_names: Tuple[str, ...], verts_local: int,
-               num_devices: int, local_concurrency: int, max_rounds: int,
-               max_sweeps: int, backend, max_colors: int, ell_width: int,
-               frontier_cap_v: int = 0, frontier_cap_e: int = 0):
+def _bsp_local(lsrc, ldst, bnd, *, axis_names: Tuple[str, ...],
+               verts_local: int, num_devices: int, local_concurrency: int,
+               max_rounds: int, max_sweeps: int, backend, max_colors: int,
+               ell_width: int, frontier_cap_v: int = 0,
+               frontier_cap_e: int = 0, wire: str = "boundary",
+               wire_colors: int = 0):
     """Per-device body (runs under shard_map).
 
-    Wire format (§Perf H-C1): ONE int16 all_gather per round carrying
-    ``color << 1 | pending`` — the committed snapshot for the NEXT round's
-    phase 1 and the conflict-detection view of THIS round are both decodable
-    from it, replacing the two int32 + one bool gathers of the naive BSP
-    round (measured 4.4x collective-byte reduction). Colors must stay below
-    2^14 (greedy uses <= Delta+1; the paper's graphs use <= 143).
+    The wire (DESIGN.md §Distributed / §Perf): the default **boundary
+    wire** packs each shard's boundary ``(color, pending)`` entries into
+    int32 words (``repro.parallel.compression.pack_halo``; entry width =
+    ``bit_length(wire_colors) + 1`` bits, ``wire_colors`` the provable
+    Delta+1 color bound) and all-gathers only those — the static
+    boundary->halo id map ``bnd`` is gathered ONCE outside the round loop.
+    The gathered payload patches the carried ``[Vp]`` snapshot/pending view
+    at the (static) boundary ids; the shard's own ``[Vl]`` slice is patched
+    locally with no collective. Exact for both the phase-1 forbids and the
+    conflict pass: every cross-shard read lands on a remote *boundary*
+    vertex by definition, and every local read on the locally-patched
+    slice — so colors, rounds and conflict histories are bit-identical to
+    the full gather. With ``wire="full"`` (the spill path) each round
+    instead gathers the whole packed-int16 ``[Vp]`` vector (H-C1:
+    ``color << 1 | pending``, colors below 2^14; one gather serves phase 1
+    AND conflict detection, §Perf H-C2).
 
     Frontier rounds (§Frontier, ``frontier_cap_v > 0``): each device
     compacts its pending vertices + incident slab edges and solves over the
     compacted slab; when EVERY device's pending set fits its vertex slab
-    (one psum vote), the wire shrinks from the full [Vp] packed gather to a
-    (global id, color) gather of the per-device frontier slabs — the
-    frontier-halo exchange — applied to a loop-carried snapshot/pending
-    view. Any overflow falls back to the full sweep / full wire for that
-    round, so results are bit-identical in all regimes. Round 0 always
-    takes the full path.
+    (one psum vote), the wire shrinks further — to a (global id, color)
+    gather of the per-device frontier slabs (H-C3), layered on top of the
+    boundary tier: it patches the same carried snapshot the boundary wire
+    maintains. Any overflow falls back to the full sweep / the configured
+    round wire, so results are bit-identical in all regimes. Round 0
+    always takes the configured round wire.
 
     The conflict pass stays fused with the wire decode rather than routing
     through engine.speculation_conflicts — the per-machine specialization
@@ -118,6 +222,14 @@ def _bsp_local(lsrc, ldst, *, axis_names: Tuple[str, ...], verts_local: int,
     C = local_concurrency
     lsrc = lsrc.reshape(-1)
     ldst = ldst.reshape(-1)
+    bnd = bnd.reshape(-1)
+    if wire not in WIRES:
+        raise ValueError(f"unknown wire {wire!r}; choose from {WIRES}")
+    use_boundary = wire == "boundary"
+    Bl = int(bnd.shape[0])
+    if use_boundary and Bl > 0 and wire_colors <= 0:
+        raise ValueError("wire='boundary' needs wire_colors (the provable "
+                         "Delta+1 color bound) to size the packed payload")
     didx = lax.axis_index(axis_names).astype(jnp.int32)
     base = didx * Vl
     gsrc = jnp.where(lsrc < Vl, lsrc + base, Vp)
@@ -150,6 +262,14 @@ def _bsp_local(lsrc, ldst, *, axis_names: Tuple[str, ...], verts_local: int,
         # mark as device-varying so while_loop carries type-check under
         # shard_map's varying-manual-axes tracking
         return pvary(x, axis_names)
+
+    if use_boundary and Bl > 0:
+        Wb = halo_words(Bl, wire_colors)
+        bnd_safe = jnp.minimum(bnd, Vl)
+        # the boundary->halo scatter map is static per shard, so ONE gather
+        # outside the round loop builds the global id map — zero per-round
+        # id traffic; pad rows carry the Vp drop sentinel
+        bnd_gids = gather(jnp.where(bnd < Vl, bnd + base, Vp))  # [D*Bl]
 
     def round_body(state):
         (colors, pending, snap, rnd, conf_hist, sweep_hist,
@@ -237,13 +357,47 @@ def _bsp_local(lsrc, ldst, *, axis_names: Tuple[str, ...], verts_local: int,
         else:
             colors, n_sweeps = full_solve(colors)
 
-        # (3) the wire: full packed gather, or the frontier-halo exchange
+        # (3) the wire: boundary-packed exchange (default), the full packed
+        # gather (spill), or the frontier-halo exchange on top
         def full_wire(colors):
             packed_local = ((colors << 1)
                             | pending.astype(jnp.int32)).astype(jnp.int16)
             packed_glob = gather(packed_local)                  # [Vp] int16
             return (packed_glob.astype(jnp.int32) >> 1,
                     (packed_glob & 1).astype(jnp.bool_))
+
+        def boundary_wire(colors):
+            # only boundary (color, pending) entries cross the wire,
+            # bit-packed; interior state of remote shards is never read, and
+            # the shard's own [Vl] snapshot slice needs no collective at all
+            if Bl > 0:
+                cpadl = jnp.concatenate([colors, jnp.zeros((1,), jnp.int32)])
+                words = pack_halo(cpadl[bnd_safe], ppad[bnd_safe],
+                                  wire_colors)                  # [Wb] int32
+                gw = gather(words).reshape(num_devices, Wb)
+                gcol, gpend = unpack_halo(gw, Bl, wire_colors)  # [D, Bl]
+                snap2 = snap.at[bnd_gids].set(gcol.reshape(-1), mode="drop")
+                pend2 = (jnp.zeros((Vp,), jnp.bool_)
+                         .at[bnd_gids].set(gpend.reshape(-1), mode="drop"))
+            else:
+                # no cross-shard edges at all (D=1, or disconnected shards):
+                # the local patch below is the whole exchange
+                snap2, pend2 = snap, jnp.zeros((Vp,), jnp.bool_)
+            snap2 = lax.dynamic_update_slice(snap2, colors, (base,))
+            pend2 = lax.dynamic_update_slice(pend2, pending, (base,))
+            return snap2, pend2
+
+        # H-C3 slab entries are (gid, color) pairs; when both fields fit one
+        # 32-bit word (gid needs bit_length(Vp) bits — Vp doubles as the
+        # drop sentinel — and a color bit_length(wire_colors)), the slab
+        # exchange ships ONE packed int32 gather instead of two. Static
+        # decision; at billion-edge Vp the fields outgrow a word and the
+        # two-gather path remains. Lossless either way, so the tiers stay
+        # bit-identical. wire_colors <= 0 (a caller without a provable
+        # color bound, e.g. shape-only dry runs) also keeps two gathers.
+        slab_cbits = int(wire_colors).bit_length()
+        slab_packed = (wire_colors > 0
+                       and int(Vp).bit_length() + slab_cbits <= 32)
 
         def slab_wire(colors):
             # only this round's pending vertices changed color or pending
@@ -252,17 +406,26 @@ def _bsp_local(lsrc, ldst, *, axis_names: Tuple[str, ...], verts_local: int,
             gids = jnp.where(slab.vert < Vl, slab.vert + base, Vp)
             cols = jnp.concatenate(
                 [colors, jnp.zeros((1,), jnp.int32)])[jnp.minimum(slab.vert, Vl)]
-            g_gids = gather(gids)                               # [D*cap_v]
-            g_cols = gather(cols)
+            if slab_packed:
+                words = ((gids.astype(jnp.uint32) << slab_cbits)
+                         | cols.astype(jnp.uint32)).astype(jnp.int32)
+                gw = gather(words).astype(jnp.uint32)           # [D*cap_v]
+                g_gids = (gw >> slab_cbits).astype(jnp.int32)
+                g_cols = (gw & jnp.uint32((1 << slab_cbits) - 1)
+                          ).astype(jnp.int32)
+            else:
+                g_gids = gather(gids)                           # [D*cap_v]
+                g_cols = gather(cols)
             snap2 = snap.at[g_gids].set(g_cols, mode="drop")
             pend2 = (jnp.zeros((Vp,), jnp.bool_)
                      .at[g_gids].set(True, mode="drop"))
             return snap2, pend2
 
+        round_wire = boundary_wire if use_boundary else full_wire
         if use_frontier:
-            snap, pend_glob = lax.cond(all_fit, slab_wire, full_wire, colors)
+            snap, pend_glob = lax.cond(all_fit, slab_wire, round_wire, colors)
         else:
-            snap, pend_glob = full_wire(colors)
+            snap, pend_glob = round_wire(colors)
         cgpad = jnp.concatenate([snap, jnp.zeros((1,), jnp.int32)])
         agpad = jnp.concatenate([pend_glob, jnp.zeros((1,), jnp.bool_)])
 
@@ -325,23 +488,35 @@ def build_distributed_coloring(mesh: Mesh, verts_local: int, edges_local: int,
                                engine: EngineSpec = "sort",
                                max_colors: int = 0, ell_width: int = 0,
                                frontier_cap_v: int = 0,
-                               frontier_cap_e: int = 0):
+                               frontier_cap_e: int = 0,
+                               wire: str = "boundary",
+                               wire_colors: int = 0):
     """Build the jitted shard_map coloring program for a mesh.
 
-    Returns ``fn(lsrc [D, El], ldst [D, El]) -> (colors [D, Vl], rounds,
-    conflicts_per_round, sweeps_per_round, frontier_per_round)``;
-    inputs/outputs sharded over all mesh axes (``sweeps_per_round`` is the
-    deepest local fixpoint across devices each round;
-    ``frontier_per_round`` the global frontier size when the round took the
-    compacted wire, else 0). Static shapes, so the identical program serves
-    dry-run lowering.
+    Returns ``fn(lsrc [D, El], ldst [D, El], bnd [D, Bl]) -> (colors
+    [D, Vl], rounds, conflicts_per_round, sweeps_per_round,
+    frontier_per_round)``; inputs/outputs sharded over all mesh axes
+    (``sweeps_per_round`` is the deepest local fixpoint across devices each
+    round; ``frontier_per_round`` the global frontier size when the round
+    took the compacted wire, else 0). Static shapes, so the identical
+    program serves dry-run lowering.
 
     ``engine`` picks the local first-fit backend; ``max_colors`` (global
-    Delta+1) sizes the bitmap/ell backends; ``ell_width`` (max degree of any
-    owned vertex) is required for the ELL-slab engines (``"ell_pallas"``,
-    ``"fused_pallas"``).
+    Delta+1, possibly capped by ``color_bound``) sizes the bitmap/ell
+    backends; ``ell_width`` (max degree of any owned vertex) is required
+    for the ELL-slab engines (``"ell_pallas"``, ``"fused_pallas"``).
     ``frontier_cap_v``/``frontier_cap_e`` enable the per-shard frontier
     slabs (0 = full sweeps every round; see repro.core.frontier).
+
+    ``wire`` picks the per-round exchange (see :func:`_bsp_local`):
+    ``"boundary"`` (default) exchanges only the packed boundary payload —
+    the halo slab width Bl is the ``bnd`` operand's second dim
+    (``ShardLayout.bnd``; 0 = no cross-shard edges, zero wire bytes) and
+    ``wire_colors`` the *uncapped* provable Delta+1 bound sizing the packed
+    entries (never the ``color_bound``-capped table capacity: a capped
+    table can still assign any color up to Delta+1). ``"full"`` gathers the
+    whole [Vp] packed vector every non-frontier round; the ``bnd`` operand
+    is still threaded (shapes stay wire-independent) but unused.
     """
     backend = get_backend(engine)
     if backend.needs_ell and ell_width <= 0:
@@ -359,17 +534,18 @@ def build_distributed_coloring(mesh: Mesh, verts_local: int, edges_local: int,
         num_devices=D, local_concurrency=local_concurrency,
         max_rounds=max_rounds, max_sweeps=max_sweeps, backend=backend,
         max_colors=max_colors, ell_width=ell_width,
-        frontier_cap_v=frontier_cap_v, frontier_cap_e=frontier_cap_e)
+        frontier_cap_v=frontier_cap_v, frontier_cap_e=frontier_cap_e,
+        wire=wire, wire_colors=wire_colors)
     spec_in = P(axis_names, None)
     smapped = shard_map(
         body, mesh=mesh,
-        in_specs=(spec_in, spec_in),
+        in_specs=(spec_in, spec_in, spec_in),
         out_specs=(P(axis_names, None), P(axis_names), P(axis_names, None),
                    P(axis_names, None), P(axis_names, None)),
     )
 
-    def run(lsrc, ldst):
-        colors, rnd, conf, sweeps, fronts = smapped(lsrc, ldst)
+    def run(lsrc, ldst, bnd):
+        colors, rnd, conf, sweeps, fronts = smapped(lsrc, ldst, bnd)
         return (colors, rnd.max(), conf.max(axis=0), sweeps.max(axis=0),
                 fronts.max(axis=0))
 
@@ -394,10 +570,12 @@ def color_distributed(graph, mesh: Mesh, local_concurrency: int = 1,
     latter taking a :class:`repro.core.graph.BipartiteGraph`): the host
     graph is lowered to its constraint graph (repro.core.distance2) and the
     BSP machinery runs on that unchanged. The boundary exchange widens to
-    two-hop halos *structurally*: the per-round wire already gathers the
-    full packed color vector, a superset of any halo, so D2's wider stencil
-    changes only which gathered entries the (now two-hop) local slab edges
-    read — no new collective, no second exchange (DESIGN.md §Models).
+    two-hop halos *structurally*: partitioning (and hence the
+    interior/boundary split) happens on the *constraint* graph, so a vertex
+    two hops away in the input graph is one constraint edge away — already
+    in the boundary set if it crosses shards. D2's wider stencil changes
+    only which constraint edges exist, never the wire protocol — no new
+    collective, no second exchange (DESIGN.md §Models).
 
     ``color_bound`` optionally caps the table-backend color capacity below
     the provable Delta+1 bound (greedy on the paper's graphs uses <= 143

@@ -187,14 +187,21 @@ def lower_coloring(mesh):
         from repro.core.frontier import frontier_capacities
         fcv, fce = frontier_capacities(vl, el,
                                        capacity=ccfg.frontier_capacity)
+    # shapes-only halo slab: no host graph to classify boundary from, so
+    # lower the worst case (every local vertex boundary, Bl = Vl); the
+    # packed-entry width takes color_bound for the same reason (no provable
+    # Delta+1 without a graph — matches the config's color_bound caveat)
+    wire = "full" if ccfg.wire == "full" else "boundary"
     fn = build_distributed_coloring(mesh, vl, el, ccfg.local_concurrency,
                                     ccfg.max_rounds, engine=ccfg.engine,
                                     max_colors=ccfg.color_bound,
-                                    frontier_cap_v=fcv, frontier_cap_e=fce)
+                                    frontier_cap_v=fcv, frontier_cap_e=fce,
+                                    wire=wire, wire_colors=ccfg.color_bound)
     lsrc = jax.ShapeDtypeStruct((D, el), jnp.int32)
     ldst = jax.ShapeDtypeStruct((D, el), jnp.int32)
+    bnd = jax.ShapeDtypeStruct((D, vl), jnp.int32)
     with set_mesh(mesh):
-        lowered = fn.lower(lsrc, ldst)
+        lowered = fn.lower(lsrc, ldst, bnd)
     return lowered, ccfg, None
 
 

@@ -359,16 +359,15 @@ class TestDeadCode:
         assert "dormant" in got[0].message
         assert "wire-up later" in got[0].message
 
-    def test_shipping_pragma_module_recognized(self):
-        # parallel/compression.py carries the pragma the analyzer keys on:
-        # its dormant exports can never escalate past DEAD100 (info). The
-        # repo-wide scan must also stay free of DEAD001 warnings.
+    def test_compression_wired_up_pragma_gone(self):
+        # parallel/compression.py used to carry a "# pending: dist_scale
+        # wire-up" pragma (DEAD100 downgrade); the boundary wire now
+        # consumes its halo codec, so the pragma is gone and the repo-wide
+        # scan must stay free of DEAD001 without it — every export is live.
         path = os.path.join(os.path.dirname(deadcode.__file__),
                             "..", "parallel", "compression.py")
         with open(path) as f:
-            m = deadcode.PENDING_PRAGMA.search(f.read())
-        assert m is not None
-        assert "dist_scale" in m.group("why")
+            assert deadcode.PENDING_PRAGMA.search(f.read()) is None
         got = [f for f in lint_tree() if f.code.startswith("DEAD")]
         assert [f for f in got if f.code == "DEAD001"] == []
 

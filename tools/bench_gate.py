@@ -40,6 +40,8 @@ DEFAULT_PAIRS = [
     ("BENCH_engine_compare.json", "fresh_engine_compare.json"),
     ("BENCH_frontier_compare.json", "fresh_frontier_compare.json"),
     ("BENCH_serve_bench.json", "fresh_serve_bench.json"),
+    ("BENCH_stream_compare.json", "fresh_stream_compare.json"),
+    ("BENCH_dist_scale.json", "fresh_dist_scale.json"),
 ]
 
 
