@@ -584,10 +584,11 @@ def _dist_worker(payload: str) -> None:
     program. Prints one JSON object on the last stdout line."""
     import jax.numpy as jnp
     from jax.sharding import Mesh
+    from repro.analysis.wirecost import closed_form_table
     from repro.core.distributed import (build_distributed_coloring,
-                                        partition_graph)
+                                        partition_graph, slab_entry_bytes)
     from repro.core.frontier import frontier_capacities
-    from repro.parallel.compression import halo_words
+    from repro.parallel.compression import halo_bytes, halo_words
     from repro.jax_compat import set_mesh
 
     cfg = json.loads(payload)
@@ -631,22 +632,45 @@ def _dist_worker(payload: str) -> None:
                 "boundary and full wires must be bit-identical"
             # bytes-on-wire per round (all_gather payload; D cancels from
             # ring-traffic ratios so per-exchange payload is the honest
-            # unit). H-C3 slab entries pack (gid, color) into one int32
-            # word when the bit fields fit (repro.core.distributed), else
-            # two words; both wires share the slab tier on rounds where
-            # the frontier fits (front > 0)
+            # unit). The per-tier byte counts come from the runtime
+            # helpers (halo_bytes / slab_entry_bytes — the code the wire
+            # actually compiles); both wires share the slab tier on
+            # rounds where the frontier fits (front > 0)
             Bl, Wb = lay.boundary_local, halo_words(lay.boundary_local, wc)
-            slab_entry = 4 if Vp.bit_length() + wc.bit_length() <= 32 else 8
+            slab_entry = slab_entry_bytes(Vp, wc)
+            t_halo = halo_bytes(Bl, wc, D)
+            t_slab = D * fcv * slab_entry
+            t_spill = Vp * 2
+            # cross-check against the SPMD verifier's independently
+            # derived closed forms AT THE MEASURED LAYOUT: runtime-vs-
+            # analyzer drift in either accounting fails the benchmark
+            # (the WIRE cost table is the contract, DESIGN.md §Perf)
+            tab = closed_form_table(
+                num_devices=D, verts_local=lay.verts_local,
+                boundary_local=Bl, wire_colors=wc, frontier_cap_v=fcv,
+                wire="boundary", scheme=scheme)["tiers"]
+            full_tab = closed_form_table(
+                num_devices=D, verts_local=lay.verts_local,
+                boundary_local=Bl, wire_colors=wc, frontier_cap_v=fcv,
+                wire="full", scheme=scheme)["tiers"]
+            assert tab["halo"]["bytes_per_round"] == t_halo, \
+                (tab["halo"], t_halo)
+            assert tab["setup"]["bytes_once"] == D * Bl * 4
+            assert tab["slab"]["bytes_per_round"] == t_slab, \
+                (tab["slab"], t_slab)
+            assert full_tab["spill"]["bytes_per_round"] == t_spill
             rounds, n_slab = b["rounds"], sum(1 for x in b["front"] if x > 0)
-            bnd_bytes = ((rounds - n_slab) * D * Wb * 4
-                         + n_slab * D * fcv * slab_entry) / rounds
-            full_bytes = ((rounds - n_slab) * Vp * 2
-                          + n_slab * D * fcv * slab_entry) / rounds
+            bnd_bytes = ((rounds - n_slab) * t_halo
+                         + n_slab * t_slab) / rounds
+            full_bytes = ((rounds - n_slab) * t_spill
+                          + n_slab * t_slab) / rounds
             per_scheme[scheme] = dict(
                 rounds=rounds, conf=b["conf"], front=b["front"],
                 us_boundary=b["us"], us_full=f["us"], rounds_full=f["rounds"],
                 verts_local=lay.verts_local, boundary_local=Bl,
                 halo_words=Wb, fcv=fcv, slab_rounds=n_slab,
+                tier_halo_bytes=t_halo, tier_slab_bytes=t_slab,
+                tier_spill_bytes=t_spill,
                 boundary_bytes_per_round=bnd_bytes,
                 full_wire_bytes_per_round=full_bytes,
                 gather16_bytes_per_round=Vp * 2,
@@ -704,6 +728,16 @@ def dist_scale(scale=10, shards=(2, 4, 8), fcv=16):
         for name, per_scheme in res["graphs"].items():
             for scheme, r in per_scheme.items():
                 assert r["rounds"] <= r["rounds_full"] + 1, (name, scheme, D)
+                # the measured per-round average is a mix of plain-halo
+                # rounds and slab rounds: it must land inside the static
+                # WIRE cost table's tier envelope (the in-worker asserts
+                # already pinned each tier to the closed form exactly)
+                lo = min(r["tier_halo_bytes"], r["tier_slab_bytes"])
+                hi = max(r["tier_halo_bytes"], r["tier_slab_bytes"])
+                assert lo <= r["boundary_bytes_per_round"] <= hi, (
+                    f"{name}/{scheme}/D{D}: measured "
+                    f"{r['boundary_bytes_per_round']:.0f} B/round outside "
+                    f"the static tier envelope [{lo}, {hi}]")
                 if D == 4 and scheme == "1d":
                     assert r["wire_ratio"] >= 4.0, (
                         f"{name}/D{D}: boundary wire ships "
@@ -856,10 +890,19 @@ def main() -> None:
     if unknown:
         ap.error(f"unknown families {unknown}; known: {', '.join(FAMILIES)}")
     if args.verify:
-        from repro.analysis import dedupe, sweep_registry, verify_findings
+        from repro.analysis import (dedupe, sweep_distributed,
+                                    sweep_registry, verify_findings)
         print("verify: sweeping the strategy x engine x model registry...",
               flush=True)
-        verify_findings(dedupe(sweep_registry()), mode="error")
+        findings = sweep_registry()
+        if "dist_scale" in selected:
+            # gate the distributed benchmark on the SPMD verifier: every
+            # wire x scheme x engine mesh program must prove collective-
+            # safe, cost-accounted and halo-exact before we time it
+            print("verify: sweeping the distributed wire x scheme grid...",
+                  flush=True)
+            findings += sweep_distributed()
+        verify_findings(dedupe(findings), mode="error")
         print("verify: clean against the committed baseline")
     print("name,us_per_call,derived")
     run_families(selected, args, json_path=args.json)

@@ -12,6 +12,17 @@ three passes:
 * **budget checker** (:mod:`.budgets`) — packed-entry bit fields, int32
   index arithmetic, per-BlockSpec VMEM footprints.
 
+Distributed (host-strategy) plans additionally run the SPMD verifier over
+the traced mesh program:
+
+* **collective safety** (:mod:`.collectives`) — branch-parity and
+  shard-uniformity proofs for every collective under control flow;
+* **wire-cost model** (:mod:`.wirecost`) — traced bytes-on-wire checked
+  against the closed-form tier accounting (DESIGN.md §Perf);
+* **halo exactness** (:mod:`.halo`) — dataflow proof that only
+  boundary/slab selections cross the wire and raw payloads are read only
+  through the ``[Vp]`` snapshot patch.
+
 Three front doors:
 
 * ``compile_plan(spec, shape, verify="warn"|"error")`` — per-plan gate
@@ -36,22 +47,34 @@ from .findings import (CODES, AnalysisError, Finding, dedupe, gating,
 from .baseline import (compare, default_baseline_path, load_baseline,
                        save_baseline)
 from . import budgets as _budgets
+from . import collectives as _collectives
 from . import deadcode as _deadcode
+from . import halo as _halo
 from . import races as _races
 from . import retrace as _retrace
+from . import wirecost as _wirecost
+from .spmd import SpmdGeometry, distributed_geometry
+from .collectives import check_collectives
+from .halo import check_halo_exactness
+from .wirecost import check_wire_cost, closed_form_table, wire_cost_table
 
 __all__ = [
     "AnalysisConfig", "AnalysisError", "Finding", "CODES",
     "analyze_plan", "analyze_spec", "lint_tree", "sweep_registry",
-    "verify_findings", "verify_plan", "dedupe", "gating",
-    "split_by_severity", "compare", "load_baseline", "save_baseline",
-    "default_baseline_path",
+    "sweep_distributed", "verify_findings", "verify_plan", "dedupe",
+    "gating", "split_by_severity", "compare", "load_baseline",
+    "save_baseline", "default_baseline_path", "SpmdGeometry",
+    "distributed_geometry", "check_collectives", "check_wire_cost",
+    "check_halo_exactness", "closed_form_table", "wire_cost_table",
 ]
 
 # the registry axes a sweep covers by default (every shipping combination)
 SWEEP_STRATEGIES = ("iterative", "dataflow", "distributed", "recolor")
 SWEEP_ENGINES = ("sort", "bitmap", "ell_pallas", "fused_pallas")
 SWEEP_MODELS = ("d1", "d2", "pd2")
+# the distributed-sweep axes (--distributed): every wire x partition cell
+SWEEP_WIRES = ("boundary", "full", "auto")
+SWEEP_SCHEMES = ("1d", "2d")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,10 +121,8 @@ def trace_plan_program(spec, statics):
     mesh program (mirroring ``DistributedStrategy.compile``)."""
     import jax
     import jax.numpy as jnp
-    import numpy as np
     from ..core.api import get_strategy
     from ..core.engine import get_backend
-    from ..core.graph import pad_bucket
 
     strategy = get_strategy(spec.strategy)
     backend = get_backend(spec.engine)
@@ -110,30 +131,25 @@ def trace_plan_program(spec, statics):
 
     if strategy.wants == "host":
         from ..jax_compat import set_mesh
-        mesh = strategy._mesh(spec)
-        D = int(np.prod(mesh.devices.shape))
-        Vl = -(-V // D)
-        slab = pad_bucket(int(-(-statics.padded_edges // D) * 1.35))
-        max_colors = int(statics.max_degree) + 1
-        if spec.color_bound > 0:
-            max_colors = min(max_colors, int(spec.color_bound))
-        use_boundary = spec.wire != "full"
-        # trace the boundary program with a non-empty halo slab even when
+        # one geometry derivation shared with the SPMD passes' closed-form
+        # expectations (spmd.distributed_geometry), so the traced program
+        # and the accounting can never disagree about the envelope. The
+        # boundary program is traced with a non-empty halo slab even when
         # the envelope carries none (the sweep mesh is 1 device, where Bl
         # is always 0): the wire code is shape-generic, and the classifier
         # must see the scatters a real multi-device plan compiles. Floor 2,
         # not 1 — a width-1 slab is a single update row, which the race
         # classifier would (correctly for THAT shape, wrongly for the
         # fleet's) discharge as unable to self-collide
-        bcap = max(2, min(Vl, int(statics.boundary_cap))) if use_boundary \
-            else 1
-        fn = strategy._build(spec, mesh, verts_local=Vl, edges_local=slab,
-                             max_colors=max_colors,
+        g = distributed_geometry(spec, statics)
+        mesh = strategy._mesh(spec)
+        fn = strategy._build(spec, mesh, verts_local=g.verts_local,
+                             edges_local=g.edges_local,
+                             max_colors=g.max_colors,
                              ell_width=int(statics.max_degree),
-                             wire=("boundary" if use_boundary else "full"),
-                             wire_colors=int(statics.max_degree) + 1)
-        shaped = sds((D, slab), jnp.int32)
-        bshaped = sds((D, bcap), jnp.int32)
+                             wire=g.wire, wire_colors=g.wire_colors)
+        shaped = sds((g.num_devices, g.edges_local), jnp.int32)
+        bshaped = sds((g.num_devices, max(1, g.boundary_cap)), jnp.int32)
         with set_mesh(mesh):
             return jax.make_jaxpr(fn)(shaped, shaped, bshaped)
 
@@ -149,9 +165,12 @@ def analyze_spec(spec, statics, *, config: Optional[AnalysisConfig] = None,
                  context: Optional[str] = None) -> List[Finding]:
     """All plan-scoped passes for one spec/envelope: spec-level budgets,
     then trace the program and run the race classifier, the envelope-leak
-    check, and the traced-geometry VMEM audit. An untraceable combination
-    yields ANALYSIS000 (the cell is *unverified*, not clean)."""
-    from ..core.api import _plan_shape
+    check, and the traced-geometry VMEM audit. Distributed (host) plans
+    additionally run the SPMD verifier: collective safety, the static
+    wire-cost model, and the halo-exactness proof. An untraceable
+    combination yields ANALYSIS000 (the cell is *unverified*, not
+    clean)."""
+    from ..core.api import _plan_shape, get_strategy
     from ..core.engine import get_backend
 
     config = config or AnalysisConfig()
@@ -174,6 +193,11 @@ def analyze_spec(spec, statics, *, config: Optional[AnalysisConfig] = None,
         closed, context=ctx, site=f"plan:{spec.strategy}")
     findings += _budgets.check_pallas_vmem(
         closed, vmem_ceiling=config.vmem_ceiling_bytes, context=ctx)
+    if get_strategy(spec.strategy).wants == "host":
+        g = distributed_geometry(spec, statics)
+        findings += _collectives.check_collectives(closed, context=ctx)
+        findings += _wirecost.check_wire_cost(closed, g, context=ctx)
+        findings += _halo.check_halo_exactness(closed, g, context=ctx)
     return findings
 
 
@@ -231,6 +255,47 @@ def sweep_registry(statics=None, *,
                     findings += _budgets.check_spec_budgets(
                         spec, statics,
                         vmem_ceiling=config.vmem_ceiling_bytes, context=ctx)
+    return dedupe(findings)
+
+
+def sweep_distributed(statics=None, *,
+                      wires: Sequence[str] = SWEEP_WIRES,
+                      schemes: Sequence[str] = SWEEP_SCHEMES,
+                      engines: Sequence[str] = SWEEP_ENGINES,
+                      config: Optional[AnalysisConfig] = None,
+                      progress=None) -> List[Finding]:
+    """The distributed sweep (``--distributed``): every wire x partition
+    scheme x engine cell of the host strategy, deduped by fingerprint.
+
+    The partition scheme only changes host-side graph partitioning and
+    ``wire="auto"`` traces the same boundary program as
+    ``wire="boundary"`` — so the mesh program is traced once per
+    (engine, resolved-wire) pair; the remaining cells still run the
+    (cheap) spec-budget pass so every combination is covered."""
+    from ..core.api import ColoringSpec, PlanShape
+
+    config = config or AnalysisConfig()
+    statics = statics or PlanShape(num_vertices=48, padded_edges=512,
+                                   max_degree=8)
+    findings: List[Finding] = []
+    traced = set()
+    for wire in wires:
+        for scheme in schemes:
+            for eng in engines:
+                spec = ColoringSpec(strategy="distributed", engine=eng,
+                                    wire=wire, partition=scheme)
+                ctx = f"distributed/{eng}/wire={wire}/{scheme}"
+                if progress is not None:
+                    progress(ctx)
+                cell = (eng, "full" if wire == "full" else "boundary")
+                if cell in traced:
+                    findings += _budgets.check_spec_budgets(
+                        spec, statics,
+                        vmem_ceiling=config.vmem_ceiling_bytes, context=ctx)
+                else:
+                    traced.add(cell)
+                    findings += analyze_spec(spec, statics, config=config,
+                                             context=ctx)
     return dedupe(findings)
 
 

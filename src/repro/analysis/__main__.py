@@ -4,12 +4,28 @@ committed baseline.
 Runs every strategy x engine x model combination through the plan-level
 passes (races, envelope leaks, budgets) plus the source-level passes
 (retrace AST lint, dead-export scan), dedupes by fingerprint, and compares
-against ``repro/analysis/baseline.json``:
+against ``repro/analysis/baseline.json``. ``--distributed`` additionally
+sweeps the host strategy across wire x partition scheme x engine and runs
+the SPMD verifier (collective safety, wire-cost model, halo exactness) on
+every traced mesh program.
+
+Exit codes are stable (tools/lint_plans.py and CI key off them):
 
 * exit 0 — every gating finding is allowlisted and no baseline entry is
   stale;
 * exit 1 — new violations (fix the code or extend the baseline with a
-  reason string) and/or stale entries (baseline drift: remove them).
+  reason string), possibly alongside stale entries;
+* exit 2 — baseline drift only: no new violations, but stale entries
+  match nothing and must be removed (deleted, not ignored).
+
+``--json PATH`` writes a machine-readable report object::
+
+    {"findings": [{code, site, severity, message, context}, ...],
+     "wire_cost": [<closed-form cost table per distributed cell>, ...],
+     "summary": {errors, warnings, infos, new, stale}}
+
+(``wire_cost`` is populated by ``--distributed``; the ``dist_scale``
+benchmark asserts measured bytes-on-wire against the same tables.)
 
 ``--write-baseline`` regenerates the entry list from the current run,
 preserving reason strings for fingerprints that already have one and
@@ -22,13 +38,33 @@ import argparse
 import json
 import sys
 
-from . import (AnalysisConfig, SWEEP_ENGINES, SWEEP_MODELS, SWEEP_STRATEGIES,
-               dedupe, lint_tree, load_baseline, save_baseline,
-               split_by_severity, sweep_registry, compare)
+from . import (AnalysisConfig, SWEEP_ENGINES, SWEEP_MODELS, SWEEP_SCHEMES,
+               SWEEP_STRATEGIES, SWEEP_WIRES, dedupe, lint_tree,
+               load_baseline, save_baseline, split_by_severity,
+               sweep_distributed, sweep_registry, compare)
 
 
 def _csv(text):
     return tuple(s.strip() for s in text.split(",") if s.strip())
+
+
+def _wire_cost_tables(wires, schemes, engines):
+    """One closed-form cost table per distributed sweep cell (the --json
+    ``wire_cost`` section)."""
+    from ..core.api import ColoringSpec, PlanShape
+    from .wirecost import wire_cost_table
+
+    statics = PlanShape(num_vertices=48, padded_edges=512, max_degree=8)
+    tables = []
+    for wire in wires:
+        for scheme in schemes:
+            spec = ColoringSpec(strategy="distributed", engine=engines[0],
+                                wire=wire, partition=scheme)
+            t = wire_cost_table(spec, statics)
+            if t is not None:
+                t["cell"] = f"wire={wire}/{scheme}"
+                tables.append(t)
+    return tables
 
 
 def main(argv=None) -> int:
@@ -39,6 +75,15 @@ def main(argv=None) -> int:
                     help="comma list (default: all registered)")
     ap.add_argument("--engines", type=_csv, default=SWEEP_ENGINES)
     ap.add_argument("--models", type=_csv, default=SWEEP_MODELS)
+    ap.add_argument("--distributed", action="store_true",
+                    help="also sweep the distributed strategy across "
+                         "wire x partition scheme x engine and run the "
+                         "SPMD verifier on every traced mesh program")
+    ap.add_argument("--wires", type=_csv, default=SWEEP_WIRES,
+                    help="comma list for --distributed "
+                         "(default: boundary,full,auto)")
+    ap.add_argument("--schemes", type=_csv, default=SWEEP_SCHEMES,
+                    help="comma list for --distributed (default: 1d,2d)")
     ap.add_argument("--no-source", action="store_true",
                     help="skip the source-level passes (AST lint, dead "
                          "exports); plan sweep only")
@@ -52,25 +97,26 @@ def main(argv=None) -> int:
                     help="regenerate the baseline from this run "
                          "(hand-annotate reasons before committing)")
     ap.add_argument("--json", dest="json_path", default=None,
-                    help="dump every finding (pre-baseline) as JSON")
+                    help="write the machine-readable report object "
+                         "(findings + wire-cost tables + summary)")
     ap.add_argument("-v", "--verbose", action="store_true",
                     help="also print info-grade and allowlisted findings")
     args = ap.parse_args(argv)
 
     config = AnalysisConfig(vmem_ceiling_bytes=args.vmem_ceiling,
                             baseline_path=args.baseline)
+    progress = lambda ctx: print(f"  analyzing {ctx}", file=sys.stderr)  # noqa: E731
     findings = sweep_registry(
         strategies=args.strategies, engines=args.engines, models=args.models,
-        config=config,
-        progress=lambda ctx: print(f"  analyzing {ctx}", file=sys.stderr))
+        config=config, progress=progress)
+    wire_cost = []
+    if args.distributed:
+        findings = dedupe(findings + sweep_distributed(
+            wires=args.wires, schemes=args.schemes, engines=args.engines,
+            config=config, progress=progress))
+        wire_cost = _wire_cost_tables(args.wires, args.schemes, args.engines)
     if not args.no_source:
         findings = dedupe(findings + lint_tree())
-
-    if args.json_path:
-        with open(args.json_path, "w", encoding="utf-8") as f:
-            json.dump([{"code": x.code, "site": x.site,
-                        "severity": x.severity, "message": x.message,
-                        "context": x.context} for x in findings], f, indent=2)
 
     errors, warnings_, infos = split_by_severity(findings)
     print(f"{len(findings)} finding(s): {len(errors)} error, "
@@ -91,6 +137,20 @@ def main(argv=None) -> int:
 
     baseline = load_baseline(args.baseline)
     new, allowed, stale = compare(findings, baseline)
+
+    if args.json_path:
+        report = {
+            "findings": [{"code": x.code, "site": x.site,
+                          "severity": x.severity, "message": x.message,
+                          "context": x.context} for x in findings],
+            "wire_cost": wire_cost,
+            "summary": {"errors": len(errors), "warnings": len(warnings_),
+                        "infos": len(infos), "new": len(new),
+                        "stale": len(stale)},
+        }
+        with open(args.json_path, "w", encoding="utf-8") as f:
+            json.dump(report, f, indent=2)
+
     if args.verbose:
         for f in infos:
             print(f.format())
@@ -100,10 +160,13 @@ def main(argv=None) -> int:
         print(f"NEW     {f.format()}")
     for fp in stale:
         print(f"STALE   baseline entry {fp} matches nothing — remove it")
-    if new or stale:
+    if new:
         print(f"FAIL: {len(new)} new violation(s), {len(stale)} stale "
               "baseline entr(ies)")
         return 1
+    if stale:
+        print(f"DRIFT: {len(stale)} stale baseline entr(ies) — delete them")
+        return 2
     print(f"clean: {len(allowed)} allowlisted, {len(infos)} info")
     return 0
 

@@ -72,6 +72,54 @@ CODES = {
                         "arithmetic"),
     "VMEM001": ("error", "kernel per-grid-step VMEM footprint estimate "
                          "exceeds the configured ceiling"),
+    # SPMD collective safety (collectives.py)
+    "COLL101": ("info", "unconditional collective in the shard program "
+                        "(inventory: every device reaches it every round)"),
+    "COLL102": ("info", "cond-guarded collectives verified safe: the "
+                        "predicate is provably shard-uniform (derived from "
+                        "a full-axis reduction), so every device takes the "
+                        "same branch"),
+    "COLL103": ("warning", "collectives under a predicate the analyzer "
+                           "cannot prove shard-uniform: the branch pair "
+                           "issues identical ordered collective sequences "
+                           "(operationally safe TODAY, one edit from "
+                           "deadlock — allowlist with the uniformity "
+                           "argument)"),
+    "COLL201": ("error", "cond branches issue mismatched collective "
+                         "sequences under a predicate not provably "
+                         "shard-uniform: devices taking different branches "
+                         "block on different collectives (SPMD deadlock)"),
+    "COLL202": ("error", "collective inside a loop whose continuation "
+                         "predicate is not provably shard-uniform: devices "
+                         "can exit on different rounds and leave peers "
+                         "blocked in the collective (ragged-exit deadlock)"),
+    "COLL203": ("error", "a loop-carried buffer patched from this round's "
+                         "exchange is never read before being carried out: "
+                         "the conflict pass consumes a stale snapshot"),
+    # static wire-cost model (wirecost.py)
+    "WIRE101": ("info", "per-round bytes-on-wire cost table entry "
+                        "(machine-readable; the dist_scale benchmark "
+                        "asserts measured bytes against it)"),
+    "WIRE201": ("error", "a wire tier's traced per-round bytes diverge from "
+                         "the closed-form accounting documented in "
+                         "DESIGN.md §Perf (code/doc drift)"),
+    "WIRE202": ("error", "per-round collective matches no documented wire "
+                         "tier: unaccounted bytes on the wire"),
+    "WIRE203": ("error", "pre-loop setup exchange diverges from the "
+                         "one-time D*Bl*4 boundary-map gather accounting"),
+    # halo exactness (halo.py)
+    "HALO101": ("info", "halo exactness proof: every per-round payload is a "
+                        "boundary/slab selection and raw gathered state "
+                        "reaches no conflict compare or mex table except "
+                        "through the snapshot patch"),
+    "HALO201": ("error", "a per-round payload in the boundary-wire program "
+                         "carries the full local state: interior entries "
+                         "ship on the wire (the boundary selection was "
+                         "bypassed)"),
+    "HALO202": ("error", "raw gathered payload reaches a conflict "
+                         "equality-compare or a non-snapshot table scatter "
+                         "without passing the [Vp] snapshot patch: remote "
+                         "interior state becomes referenceable"),
     # dead-code report (deadcode.py)
     "DEAD001": ("warning", "public export referenced nowhere outside its "
                            "defining module"),

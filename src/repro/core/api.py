@@ -849,6 +849,22 @@ class ColoringPlan:
         return _build_report(raw, self.spec, self.strategy.name, perm, t0,
                              batch_denom=batch_denom)
 
+    # ----------------------------------------------------------- introspection
+    def wire_cost(self) -> Optional[dict]:
+        """The closed-form bytes-on-wire cost table for this plan's
+        envelope (distributed plans only; ``None`` otherwise).
+
+        The same per-tier accounting the SPMD verifier checks the traced
+        mesh program against (``repro.analysis.wirecost``) and the
+        ``dist_scale`` benchmark asserts its measured bytes against —
+        ``{"tiers": {"halo": {...}, "setup": {...}, ...}, ...}`` keyed by
+        the plan's resolved wire, with the formula strings alongside the
+        numbers."""
+        if self.strategy.wants != "host":
+            return None
+        from ..analysis.wirecost import wire_cost_table
+        return wire_cost_table(self.spec, self.statics)
+
     # ------------------------------------------------------------ execution
     def __call__(self, g, **runtime) -> ColoringReport:
         """Color ``g`` through the compiled program. ``runtime`` kwargs are
@@ -911,8 +927,10 @@ def compile_plan(spec: ColoringSpec, graph_or_shape,
     plan's program and envelope before returning (DESIGN.md §Analysis):
     ``"warn"`` emits a Python warning for any finding not covered by the
     committed baseline, ``"error"`` raises
-    :class:`repro.analysis.AnalysisError` instead. The analysis happens
-    after construction but before the first trace, so a hazardous spec is
+    :class:`repro.analysis.AnalysisError` instead. Distributed plans also
+    run the SPMD verifier (collective safety, wire-cost model, halo
+    exactness) over the traced mesh program. The analysis happens after
+    construction but before the first trace, so a hazardous spec is
     reported (or refused) before any program runs."""
     plan = ColoringPlan(spec, graph_or_shape)
     if verify is not None:

@@ -68,6 +68,20 @@ PARTITION_SCHEMES = ("1d", "2d")
 WIRES = ("boundary", "full")
 
 
+def slab_entry_bytes(verts_global: int, wire_colors: int) -> int:
+    """Wire bytes one H-C3 frontier-slab entry costs: 4 when the
+    ``(gid, color)`` pair packs into a single int32 word (gid needs
+    ``bit_length(Vp)`` bits — ``Vp`` doubles as the drop sentinel — plus
+    ``bit_length(wire_colors)`` for the color), else 8 via the two-gather
+    path. The single packing rule shared by ``_bsp_local``'s trace-time
+    decision, the ``dist_scale`` benchmark's accounting, and (re-derived
+    independently) the SPMD verifier's WIRE cost model."""
+    packed = (wire_colors > 0 and
+              int(verts_global).bit_length()
+              + int(wire_colors).bit_length() <= 32)
+    return 4 if packed else 8
+
+
 def _grid_shape(num_devices: int):
     """The ``Pr x Pc`` device grid of the 2D block-cyclic scheme: ``Pr`` the
     largest divisor of D at most ``sqrt(D)`` (a prime D degenerates to a
@@ -388,16 +402,14 @@ def _bsp_local(lsrc, ldst, bnd, *, axis_names: Tuple[str, ...],
             return snap2, pend2
 
         # H-C3 slab entries are (gid, color) pairs; when both fields fit one
-        # 32-bit word (gid needs bit_length(Vp) bits — Vp doubles as the
-        # drop sentinel — and a color bit_length(wire_colors)), the slab
-        # exchange ships ONE packed int32 gather instead of two. Static
-        # decision; at billion-edge Vp the fields outgrow a word and the
-        # two-gather path remains. Lossless either way, so the tiers stay
-        # bit-identical. wire_colors <= 0 (a caller without a provable
+        # 32-bit word, the slab exchange ships ONE packed int32 gather
+        # instead of two (slab_entry_bytes is the shared packing rule).
+        # Static decision; at billion-edge Vp the fields outgrow a word and
+        # the two-gather path remains. Lossless either way, so the tiers
+        # stay bit-identical. wire_colors <= 0 (a caller without a provable
         # color bound, e.g. shape-only dry runs) also keeps two gathers.
         slab_cbits = int(wire_colors).bit_length()
-        slab_packed = (wire_colors > 0
-                       and int(Vp).bit_length() + slab_cbits <= 32)
+        slab_packed = slab_entry_bytes(Vp, wire_colors) == 4
 
         def slab_wire(colors):
             # only this round's pending vertices changed color or pending

@@ -51,6 +51,16 @@ def halo_words(n: int, color_bound: int) -> int:
     return -(-n // k)
 
 
+def halo_bytes(n: int, color_bound: int, num_devices: int = 1) -> int:
+    """Per-round bytes the packed boundary halo puts on the wire:
+    ``D * halo_words(n, bound) * 4`` — each device gathers every peer's
+    word slab. This is the runtime half of the H-C4 accounting; the SPMD
+    verifier (``repro.analysis.wirecost``) re-derives the same closed
+    form independently from DESIGN.md §Perf, and drift between the two
+    is a WIRE201 lint error."""
+    return num_devices * halo_words(n, color_bound) * 4
+
+
 def pack_halo(colors, pending, color_bound: int):
     """Bit-pack ``(colors [..., n] int, pending [..., n] bool)`` into
     ``[..., halo_words(n, color_bound)]`` int32 words — losslessly, as

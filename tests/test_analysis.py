@@ -424,7 +424,10 @@ class TestVerify:
 @pytest.mark.slow
 class TestFullSweep:
     def test_registry_sweeps_clean_against_committed_baseline(self):
-        findings = dedupe(sweep_registry() + lint_tree())
+        from repro.analysis import sweep_distributed
+        # the full lint lane: registry + distributed wire/scheme sweep
+        findings = dedupe(sweep_registry() + sweep_distributed()
+                          + lint_tree())
         baseline = load_baseline()
         new, allowed, stale = compare(findings, baseline)
         assert [f.format() for f in new] == []
@@ -457,12 +460,61 @@ class TestCli:
         assert rc == 0
         with open(out) as f:
             doc = json.load(f)
-        assert doc and all(d["code"] and d["site"] for d in doc)
+        assert doc["findings"] and all(d["code"] and d["site"]
+                                       for d in doc["findings"])
+        assert doc["summary"]["new"] == 0 and doc["summary"]["stale"] == 0
+        assert doc["wire_cost"] == []  # populated only under --distributed
 
-    def test_stale_baseline_fails_the_lane(self, tmp_path):
+    def test_stale_baseline_exits_2(self, tmp_path):
+        # drift-only (no new violations) is its own stable exit code so CI
+        # can distinguish "fix your code" from "prune the baseline"
+        cell = dict(strategies=("iterative",), engines=("sort",),
+                    models=("d1",))
+        fps = {f.fingerprint: "scoped" for f in gating(sweep_registry(**cell))}
+        fps["RACE300@core/nowhere.py:f"] = "stale"
+        base = str(tmp_path / "b.json")
+        save_baseline(fps, base)
+        rc = analysis_main(["--strategies", "iterative", "--engines", "sort",
+                            "--models", "d1", "--no-source",
+                            "--baseline", base])
+        assert rc == 2
+
+    def test_new_violation_exits_1(self, tmp_path):
+        # an unbaselined gating finding dominates: exit 1 even when stale
+        # entries are also present
         base = str(tmp_path / "b.json")
         save_baseline({"RACE300@core/nowhere.py:f": "stale"}, base)
         rc = analysis_main(["--strategies", "iterative", "--engines", "sort",
                             "--models", "d1", "--no-source",
                             "--baseline", base])
         assert rc == 1
+
+    def test_distributed_flag_sweeps_clean_with_wire_cost(self, tmp_path):
+        from repro.analysis import sweep_distributed
+        fps = {f.fingerprint: "scoped to the distributed/sort cells"
+               for f in gating(dedupe(
+                   sweep_registry(strategies=("distributed",),
+                                  engines=("sort",), models=("d1",))
+                   + sweep_distributed(engines=("sort",))))}
+        base = str(tmp_path / "cell.json")
+        save_baseline(fps, base)
+        out = str(tmp_path / "report.json")
+        rc = analysis_main(["--strategies", "distributed",
+                            "--engines", "sort", "--models", "d1",
+                            "--distributed", "--no-source",
+                            "--baseline", base, "--json", out])
+        assert rc == 0
+        with open(out) as f:
+            doc = json.load(f)
+        # one closed-form cost table per wire x scheme cell, each carrying
+        # the tier accounting the dist_scale benchmark asserts against
+        assert len(doc["wire_cost"]) == 6
+        for t in doc["wire_cost"]:
+            tiers = t["tiers"]
+            if t["wire"] == "boundary":
+                assert {"halo", "setup"} <= set(tiers)
+            else:
+                assert "spill" in tiers
+        spmd = {d["code"] for d in doc["findings"]
+                if d["code"].startswith(("COLL", "WIRE", "HALO"))}
+        assert {"COLL101", "COLL102", "WIRE101", "HALO101"} <= spmd

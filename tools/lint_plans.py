@@ -10,15 +10,25 @@ spelled out:
   a risk-acceptance for code that no longer exists must not linger);
 * info findings never gate.
 
+Exit codes are stable and CI keys off them:
+
+* ``0`` — clean: every gating finding allowlisted, no stale entries;
+* ``1`` — new violations (possibly alongside stale entries);
+* ``2`` — baseline drift only: stale entries match nothing — delete
+  them (a risk-acceptance for vanished code must not linger).
+
 Run locally before pushing::
 
-  PYTHONPATH=src python tools/lint_plans.py [-v]
+  PYTHONPATH=src python tools/lint_plans.py --distributed [-v]
 
 Extra arguments pass straight through to the analyzer CLI
-(``--strategies``, ``--vmem-ceiling``, ``--json``, ...). The CI lane runs
-this under ``-W error::DeprecationWarning`` so the analyzer itself — which
-traces every registry program — also proves the coloring stack deprecation
--clean end to end.
+(``--strategies``, ``--distributed``, ``--vmem-ceiling``, ...).
+``--json PATH`` writes the machine-readable report object — the findings
+list, the per-cell wire-cost tables (``--distributed``), and a summary —
+which the CI lane uploads as an artifact. The CI lane runs this under
+``-W error::DeprecationWarning`` so the analyzer itself — which traces
+every registry program — also proves the coloring stack deprecation-clean
+end to end.
 """
 from __future__ import annotations
 
